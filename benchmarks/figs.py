@@ -1,0 +1,173 @@
+"""One benchmark per paper table/figure (virtual-time under the calibrated
+hardware envelope; wall time reported alongside).
+
+Scaled-down synthetic instances reproduce the paper's *ratios*: system
+ordering in Fig. 5, >=90% of in-memory throughput in Fig. 6, IO-stack
+saturation with ~30% worker budget in Fig. 7, cache gains in Figs. 8-10,
+pipeline gains in Fig. 11.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core.iostack import (AsyncIOEngine, CPUManagedEngine, FeatureStore,
+                                SyncIOEngine)
+from repro.core.simulator import ArrayModel, DEFAULT_ENVELOPE
+from repro.gnn.graph import DATASETS, synth_graph
+from repro.gnn.train import OutOfCoreGNNTrainer, TrainerConfig
+
+ROOT = tempfile.mkdtemp(prefix="helios_bench_")
+N_V = 20000
+N_BATCHES = 6
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def _store(dim, n_shards=12, tag=""):
+    return FeatureStore(os.path.join(ROOT, f"f{dim}_{n_shards}{tag}"),
+                        n_rows=N_V, row_dim=dim, n_shards=n_shards,
+                        create=True, rng_seed=0)
+
+
+def _graph(skew=1.2):
+    return synth_graph(N_V, 8, skew=skew, seed=0)
+
+
+def _run(graph, store, mode, **kw):
+    cfg = TrainerConfig(mode=mode, batch_size=512, fanouts=(10, 5), hidden=128,
+                        presample_batches=3, **kw)
+    tr = OutOfCoreGNNTrainer(graph, store, cfg)
+    out = tr.train(N_BATCHES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+def fig5_end_to_end():
+    """Fig. 5: Helios vs GIDS (GPU-managed) vs Ginex-like (CPU-managed)."""
+    g = _graph()
+    store = _store(256)
+    base = None
+    for model in ("sage", "gcn"):
+        for mode in ("helios", "gids", "cpu"):
+            out = _run(g, store, mode, model=model)
+            t = out["virtual_per_batch_s"] * 1e6
+            if mode == "helios":
+                base = t
+            emit(f"fig5/{model}/{mode}", t,
+                 f"speedup_vs_helios={base / t:.3f}")
+
+
+def fig6_inmem():
+    """Fig. 6: Helios (10% host cache) vs Helios-InMem (100% host cache)."""
+    g = _graph()
+    store = _store(1024, tag="f6")
+    for model in ("sage", "gcn"):
+        oo = _run(g, store, "helios", model=model,
+                  device_cache_frac=0.05, host_cache_frac=0.10)
+        im = _run(g, store, "helios", model=model,
+                  device_cache_frac=0.05, host_cache_frac=1.0)
+        frac = im["virtual_per_batch_s"] / oo["virtual_per_batch_s"]
+        emit(f"fig6/{model}/out-of-core", oo["virtual_per_batch_s"] * 1e6,
+             f"inmem_throughput_frac={frac:.3f}")
+
+
+def fig7_iostack():
+    """Fig. 7: disk IO throughput vs #SSDs / feature dim / core budget."""
+    n_req = 50000
+    for n_ssd in (1, 2, 4, 6, 8, 12):
+        store = _store(1024, n_shards=n_ssd, tag="f7")
+        for budget, label in ((0.1, "helios-8blk"), (0.3, "helios-32blk"),
+                              (0.6, "helios-64blk"), (1.0, "helios-128blk")):
+            eng = AsyncIOEngine(store, worker_budget=budget)
+            eng.submit(np.random.randint(0, N_V, n_req)).wait()
+            bw = eng.stats.bytes / eng.stats.virtual_io_s
+            emit(f"fig7a/ssd{n_ssd}/{label}",
+                 eng.stats.virtual_io_s * 1e6 / 1, f"GBps={bw / 1e9:.2f}")
+            eng.close()
+        eng = SyncIOEngine(store)
+        eng.submit(np.random.randint(0, N_V, n_req))
+        bw = eng.stats.bytes / eng.stats.virtual_io_s
+        emit(f"fig7a/ssd{n_ssd}/gids", eng.stats.virtual_io_s * 1e6,
+             f"GBps={bw / 1e9:.2f}")
+    for dim in (128, 256, 512, 1024):
+        store = _store(dim, n_shards=12, tag="f7b")
+        eng = AsyncIOEngine(store, worker_budget=0.3)
+        eng.submit(np.random.randint(0, N_V, n_req)).wait()
+        bw = eng.stats.bytes / eng.stats.virtual_io_s
+        peak = ArrayModel(12).peak_bw(dim * 4)
+        emit(f"fig7b/dim{dim}/helios-32blk", eng.stats.virtual_io_s * 1e6,
+             f"frac_of_peak={bw / peak:.2f}")
+        eng.close()
+
+
+def fig8_cpu_cache_ssds():
+    """Fig. 8: CPU cache impact across SSD counts (CL-like skew)."""
+    g = _graph(skew=1.0)
+    for n_ssd in (2, 4, 8, 12):
+        store = _store(1024, n_shards=n_ssd, tag="f8")
+        with_c = _run(g, store, "helios", device_cache_frac=0.0,
+                      host_cache_frac=0.35)
+        no_c = _run(g, store, "helios-nocache")
+        sp = no_c["virtual_per_batch_s"] / with_c["virtual_per_batch_s"]
+        emit(f"fig8/ssd{n_ssd}/cpucache",
+             with_c["virtual_per_batch_s"] * 1e6, f"speedup_vs_nocache={sp:.2f}")
+
+
+def fig9_cpu_cache_dims():
+    """Fig. 9: CPU cache impact across feature dims (small dims hurt SSDs)."""
+    g = _graph(skew=1.0)
+    for dim in (128, 256, 512, 1024):
+        store = _store(dim, tag="f9")
+        with_c = _run(g, store, "helios", device_cache_frac=0.0,
+                      host_cache_frac=0.35)
+        no_c = _run(g, store, "helios-nocache")
+        sp = no_c["virtual_per_batch_s"] / with_c["virtual_per_batch_s"]
+        emit(f"fig9/dim{dim}/cpucache",
+             with_c["virtual_per_batch_s"] * 1e6, f"speedup_vs_nocache={sp:.2f}")
+
+
+def fig10_gpu_cache():
+    """Fig. 10: adding the device cache tier on top of the host cache."""
+    for name, skew in (("PA", 0.8), ("IG", 0.9), ("CL", 1.2)):
+        g = _graph(skew=skew)
+        store = _store(512, tag=f"f10{name}")
+        full = _run(g, store, "helios", device_cache_frac=0.15,
+                    host_cache_frac=0.35)
+        cpu_only = _run(g, store, "helios", device_cache_frac=0.0,
+                        host_cache_frac=0.35)
+        sp = cpu_only["virtual_per_batch_s"] / full["virtual_per_batch_s"]
+        emit(f"fig10/{name}/helios", full["virtual_per_batch_s"] * 1e6,
+             f"speedup_vs_cpucache_only={sp:.2f}")
+
+
+def fig11_pipeline():
+    """Fig. 11: deep pipeline vs serial operators."""
+    g = _graph()
+    store = _store(512, tag="f11")
+    for model in ("sage", "gcn"):
+        deep = _run(g, store, "helios", model=model)
+        ser = _run(g, store, "helios-nopipe", model=model)
+        sp = ser["virtual_per_batch_s"] / deep["virtual_per_batch_s"]
+        emit(f"fig11/{model}/pipeline", deep["virtual_per_batch_s"] * 1e6,
+             f"speedup_vs_nopipe={sp:.2f}")
+
+
+def table1_datasets():
+    """Table 1 sanity: registered dataset characteristics."""
+    for name, d in DATASETS.items():
+        emit(f"table1/{name}", 0.0,
+             f"V={d.n_vertices};E={d.n_edges};dim={d.feature_dim};"
+             f"feat_tb={d.feature_tb}")
+
+
+ALL = [table1_datasets, fig7_iostack, fig5_end_to_end, fig6_inmem,
+       fig8_cpu_cache_ssds, fig9_cpu_cache_dims, fig10_gpu_cache,
+       fig11_pipeline]

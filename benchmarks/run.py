@@ -1,0 +1,29 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Run all:
+
+    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --only fig7,fig11
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    from benchmarks import figs
+    sel = [s.strip() for s in args.only.split(",") if s.strip()]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for fn in figs.ALL:
+        if sel and not any(fn.__name__.startswith(s) for s in sel):
+            continue
+        fn()
+    print(f"# total wall {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

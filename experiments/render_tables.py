@@ -1,0 +1,54 @@
+"""Render EXPERIMENTS.md tables from the dry-run / perf JSON artifacts."""
+import json
+import sys
+
+
+def roofline_table(path):
+    rows = json.load(open(path))
+    out = ["| cell | peak GB/chip | fits | t_comp ms | t_mem ms | t_mem floor | t_coll ms | bottleneck | useful FLOPs | MFU bound |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "skip":
+            out.append(f"| {r['cell']} | — | — | — | — | — | — | skip: sub-quadratic only | — | — |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['cell']} | FAIL | | | | | | {r.get('error','')[:40]} | | |")
+            continue
+        out.append(
+            f"| {r['cell']} | {r['peak_mem_gb_per_chip']:.1f} | "
+            f"{'yes' if r['fits_16gb'] else 'NO'} | {r['t_compute_ms']:.1f} | "
+            f"{r['t_memory_ms']:.0f} | {r['t_memory_floor_ms']:.1f} | "
+            f"{r['t_collective_ms']:.0f} | {r['bottleneck']} | "
+            f"{r['useful_flops_frac']:.2f} | {r['mfu_bound']:.2%} |")
+    return "\n".join(out)
+
+
+def perf_table(path):
+    chains = json.load(open(path))
+    out = []
+    for c in chains:
+        out.append(f"\n**Cell: {c['cell']}**\n")
+        out.append("| variant | hypothesis (abridged) | mem ms | coll ms | compute ms | peak GB | verdict |")
+        out.append("|---|---|---|---|---|---|---|")
+        prev = None
+        for r in c["rows"]:
+            verdict = ""
+            if prev is not None:
+                dm = (r["t_memory_ms"] - prev["t_memory_ms"]) / max(prev["t_memory_ms"], 1)
+                dc = (r["t_collective_ms"] - prev["t_collective_ms"]) / max(prev["t_collective_ms"], 1)
+                dp = r["peak_mem_gb_per_chip"] - prev["peak_mem_gb_per_chip"]
+                verdict = f"mem {dm:+.0%}, coll {dc:+.0%}, peak {dp:+.1f}GB"
+            out.append(
+                f"| {r['variant']} | {r['hypothesis'][:80]} | "
+                f"{r['t_memory_ms']:.0f} | {r['t_collective_ms']:.0f} | "
+                f"{r['t_compute_ms']:.0f} | {r['peak_mem_gb_per_chip']:.1f} | {verdict} |")
+            prev = r
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1]
+    if which == "roofline":
+        print(roofline_table(sys.argv[2]))
+    else:
+        print(perf_table(sys.argv[2]))

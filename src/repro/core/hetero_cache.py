@@ -1,0 +1,127 @@
+"""GPU-managed heterogeneous cache (paper §3.2, TPU-adapted).
+
+Three tiers: device HBM (hottest rows, ~2 TB/s), host DRAM (second-hottest
+rows + all topology, PCIe-fed), storage shards (everything, via the async
+IO stack).  Placement is the static pre-sampling hotness policy
+(``hotness.placement``).  Lookup is device-parallel: the location/slot
+translation tables live with the request batch and the three tier gathers
+are issued together — storage first (longest latency), then host, then
+device — exactly the paper's overlap ordering.
+
+On real TPU hardware the device-tier gather is the Pallas kernel in
+``repro.kernels.gather``; here the jnp fallback is used and the Pallas
+kernel is validated in interpret mode by the kernel tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import hotness as hotness_mod
+from repro.core.iostack import AsyncIOEngine, FeatureStore, IOStats
+from repro.core.simulator import (DEFAULT_ENVELOPE, HardwareEnvelope,
+                                  dram_gather_time, hbm_gather_time,
+                                  pcie_time)
+
+
+@dataclass
+class CacheStats:
+    device_hits: int = 0
+    host_hits: int = 0
+    storage_misses: int = 0
+    virtual_device_s: float = 0.0
+    virtual_host_s: float = 0.0
+    virtual_storage_s: float = 0.0
+    wall_s: float = 0.0
+    batches: int = 0
+
+    @property
+    def hit_rate(self):
+        total = self.device_hits + self.host_hits + self.storage_misses
+        return (self.device_hits + self.host_hits) / total if total else 0.0
+
+    def virtual_batch_time(self, pipelined: bool) -> float:
+        """Per-call data-path time: tiers overlap when pipelined."""
+        ts = (self.virtual_device_s, self.virtual_host_s, self.virtual_storage_s)
+        return max(ts) if pipelined else sum(ts)
+
+
+class HeteroCache:
+    """Hotness-placed 3-tier feature cache."""
+
+    def __init__(self, store: FeatureStore, hotness: np.ndarray,
+                 device_rows: int, host_rows: int,
+                 io_engine: AsyncIOEngine | None = None,
+                 env: HardwareEnvelope = DEFAULT_ENVELOPE):
+        self.store = store
+        self.env = env
+        self.io = io_engine or AsyncIOEngine(store, env=env)
+        self.loc, self.slot = hotness_mod.placement(hotness, device_rows, host_rows)
+        order = np.argsort(-hotness, kind="stable")
+        dev_ids = order[:device_rows]
+        host_ids = order[device_rows:device_rows + host_rows]
+        # device tier: jnp array (HBM); host tier: pinned numpy
+        import jax.numpy as jnp
+        self.device_tier = (jnp.asarray(store.read_rows(dev_ids))
+                            if len(dev_ids) else jnp.zeros((0, store.row_dim)))
+        self.host_tier = (store.read_rows(host_ids)
+                          if len(host_ids) else
+                          np.zeros((0, store.row_dim), store.dtype))
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------------
+    def plan(self, ids: np.ndarray):
+        """Split a request batch by tier -> (dev, host, disk) x (slot, dest)."""
+        loc = self.loc[ids]
+        slot = self.slot[ids]
+        dest = np.arange(len(ids))
+        d = loc == 0
+        h = loc == 1
+        s = loc == 2
+        return ((slot[d], dest[d]), (slot[h], dest[h]), (ids[s], dest[s]))
+
+    def gather(self, ids: np.ndarray, pipelined: bool = True) -> np.ndarray:
+        """Fetch feature rows for ``ids`` through the hierarchy."""
+        import jax
+        import jax.numpy as jnp
+        t0 = time.perf_counter()
+        (dslot, ddest), (hslot, hdest), (sids, sdest) = self.plan(ids)
+        out = np.empty((len(ids), self.store.row_dim), self.store.dtype)
+
+        # 1. storage first: async submit, longest latency (paper ordering)
+        ticket = self.io.submit(sids, out, sdest) if len(sids) else None
+        # 2. host tier gather (DRAM -> staging -> device over PCIe)
+        if len(hslot):
+            out[hdest] = self.host_tier[hslot]
+        # 3. device tier gather (HBM-parallel; Pallas kernel on real TPU)
+        dev_rows = None
+        if len(dslot):
+            dev_rows = jnp.take(self.device_tier, jnp.asarray(dslot), axis=0)
+        # 4. completion handling
+        if ticket is not None:
+            ticket.wait()
+        if dev_rows is not None:
+            out[ddest] = np.asarray(dev_rows)
+
+        # virtual-time accounting per tier
+        rb = self.store.row_bytes
+        st = self.stats
+        st.device_hits += len(dslot)
+        st.host_hits += len(hslot)
+        st.storage_misses += len(sids)
+        st.virtual_device_s += hbm_gather_time(len(dslot) * rb, self.env)
+        st.virtual_host_s += (dram_gather_time(len(hslot) * rb, self.env)
+                              + pcie_time(len(hslot) * rb, self.env))
+        if len(sids):
+            st.virtual_storage_s += self.io.model.read_time(
+                len(sids), rb, self.env.nvme_queue_depth)
+        st.wall_s += time.perf_counter() - t0
+        st.batches += 1
+        return out
+
+    def gather_device(self, ids_dev, fallback: np.ndarray | None = None):
+        """Pure device-tier lookup for jit'd consumers (hot rows only)."""
+        import jax.numpy as jnp
+        return jnp.take(self.device_tier, ids_dev, axis=0)

@@ -1,0 +1,54 @@
+"""Pre-sampling hotness policy (paper §3.2.2, after Legion/GNNLab).
+
+Before training starts, run one epoch of the *actual* access pattern
+(neighbor sampling for GNNs; router statistics for MoE; token frequencies
+for embeddings), count per-row accesses, and place the hottest rows in the
+device tier, the second-hottest in the host tier, the rest on storage.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def presample_gnn(sampler, seeds_per_batch: int, n_batches: int,
+                  n_rows: int, seed: int = 0) -> np.ndarray:
+    """One pre-sampling epoch: counts vertex accesses under the sampler."""
+    rng = np.random.default_rng(seed)
+    counts = np.zeros(n_rows, np.int64)
+    for _ in range(n_batches):
+        seeds = rng.integers(0, n_rows, seeds_per_batch)
+        batch = sampler.sample(seeds)
+        ids, c = np.unique(batch.all_nodes, return_counts=True)
+        np.add.at(counts, ids, c)
+    return counts
+
+
+def token_hotness(token_stream: np.ndarray, vocab: int) -> np.ndarray:
+    """Token-frequency hotness for out-of-core embedding tables."""
+    return np.bincount(token_stream.reshape(-1), minlength=vocab).astype(np.int64)
+
+
+def expert_hotness(routing_counts: np.ndarray) -> np.ndarray:
+    """Per-expert hotness from router statistics (MoE expert streaming)."""
+    return routing_counts.astype(np.int64)
+
+
+def placement(hotness: np.ndarray, device_rows: int, host_rows: int):
+    """Static placement: returns (loc, slot) arrays.
+
+    loc[i]  in {0: device, 1: host, 2: storage}
+    slot[i] = index within its tier.
+    """
+    n = len(hotness)
+    order = np.argsort(-hotness, kind="stable")
+    loc = np.full(n, 2, np.int8)
+    slot = np.zeros(n, np.int64)
+    dev = order[:device_rows]
+    host = order[device_rows:device_rows + host_rows]
+    disk = order[device_rows + host_rows:]
+    loc[dev] = 0
+    loc[host] = 1
+    slot[dev] = np.arange(len(dev))
+    slot[host] = np.arange(len(host))
+    slot[disk] = disk                      # storage is addressed by row id
+    return loc, slot

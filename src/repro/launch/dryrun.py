@@ -1,0 +1,228 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the device-count flag before any jax import (jax locks the device
+count on first init) — hence the first two lines.
+
+For every cell this script:
+  1. builds the jitted step (train_step / prefill_step / decode_step),
+  2. lowers it with sharded ShapeDtypeStructs (no allocation),
+  3. compiles (SPMD partitioning for 256 or 512 chips),
+  4. prints memory_analysis() (fit proof) and cost_analysis() (FLOPs/bytes),
+  5. extracts the three roofline terms (launch/roofline.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single          # 40 cells
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi           # pod axis
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_configs
+from repro.distributed.sharding import (ShardingCtx, param_specs, use_mesh,
+                                        with_specs)
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import encdec, lm, steps
+from repro.train import optim
+
+
+# ---------------------------------------------------------------------------
+# Input / state spec construction
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, sharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(cfg, shape, ctx: ShardingCtx):
+    """ShapeDtypeStructs for the data batch of one cell."""
+    out = {}
+    for name, (shp, dt) in steps.input_shapes(cfg, shape).items():
+        if shape.kind == "train":
+            names = ("mb", "batch") + (None,) * (len(shp) - 2)
+        else:
+            names = ("batch",) + (None,) * (len(shp) - 1)
+        names = tuple(n if n != "mb" else None for n in names)
+        out[name] = _sds(shp, dt, ctx.sharding(names, shp))
+    return out
+
+
+_CACHE_AXES = {
+    "k": (None, "batch", "kv_seq", None, None),
+    "v": (None, "batch", "kv_seq", None, None),
+    "cross_k": (None, "batch", "kv_seq", None, None),
+    "cross_v": (None, "batch", "kv_seq", None, None),
+    "wkv": (None, "batch", "rnn", None, None),
+    "tm_x": (None, "batch", None),
+    "cm_x": (None, "batch", None),
+    "h": (None, "batch", "rnn"),
+    "conv": (None, "batch", None, "rnn"),
+}
+
+
+def cache_specs(cache_sds, ctx: ShardingCtx):
+    def one(path, leaf):
+        name = None
+        for pp in reversed(path):
+            k = getattr(pp, "key", getattr(pp, "name", None))
+            if k in _CACHE_AXES:
+                name = k
+                break
+        axes = _CACHE_AXES.get(name, (None,) * len(leaf.shape))
+        axes = axes[:len(leaf.shape)]
+        axes = axes + (None,) * (len(leaf.shape) - len(axes))
+        return _sds(leaf.shape, leaf.dtype, ctx.sharding(axes, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, cache_sds)
+
+
+def make_optimizer(cfg):
+    # the 1T arch uses factored second moments (memory fit, DESIGN.md §7)
+    if cfg.tiered_experts or cfg.name.startswith("kimi"):
+        return optim.adafactor(1e-2)
+    return optim.adamw(3e-4)
+
+
+def params_sds(cfg):
+    init = encdec.init_params if cfg.enc_dec else lm.init_params
+    return jax.eval_shape(lambda: init(jax.random.key(0), cfg))
+
+
+def build_cell(cfg, shape, ctx: ShardingCtx):
+    """Returns (step_fn, args tuple of sharded SDS, donate_argnums)."""
+    if shape.kind == "train":
+        # invariant learned in §Perf (kimi iterations 3/4): a per-microbatch
+        # batch smaller than the batch-sharding degree silently REPLICATES
+        # activations across the data axis (observed +70 GB/chip) — clamp
+        # the grad-accumulation depth to keep it a shard multiple
+        import dataclasses
+        shards = ctx.axis_size(("pod", "data"))
+        n_mb = min(max(cfg.train_microbatches, 1),
+                   max(shape.global_batch // shards, 1))
+        if n_mb != cfg.train_microbatches:
+            cfg = dataclasses.replace(cfg, train_microbatches=n_mb)
+    p_sds = params_sds(cfg)
+    p_specs = param_specs(p_sds, ctx, fsdp=cfg.fsdp)
+    p_in = with_specs(p_sds, p_specs)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg)
+        o_sds = jax.eval_shape(opt.init, p_sds)
+        o_specs = param_specs(o_sds, ctx, fsdp=cfg.fsdp)
+        state = {"params": p_in, "opt": with_specs(o_sds, o_specs)}
+        fn = steps.make_train_step(cfg, opt)
+        return fn, (state, batch_specs(cfg, shape, ctx)), (0,)
+
+    if shape.kind == "prefill":
+        fn = steps.make_prefill_step(cfg)
+        return fn, (p_in, batch_specs(cfg, shape, ctx)), ()
+
+    # decode
+    B, T = shape.global_batch, shape.seq_len
+    c_sds = steps.eval_cache_shapes(cfg, B, T)
+    c_in = cache_specs(c_sds, ctx)
+    tok = _sds((B, 1), jnp.int32, ctx.sharding(("batch", None), (B, 1)))
+    pos = _sds((), jnp.int32, ctx.sharding((), ()))
+    fn = steps.make_decode_step(cfg)
+    return fn, (p_in, c_in, tok, pos), (1,)
+
+
+# ---------------------------------------------------------------------------
+# Cell execution
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = mesh.size
+    cell = f"{arch}/{shape_name}/{'x'.join(str(s) for s in mesh.shape.values())}"
+    if not cfg.supports(shape):
+        return {"cell": cell, "status": "skip",
+                "reason": "full-attention arch: 500k decode requires "
+                          "sub-quadratic attention (see DESIGN.md §7)"}
+    t0 = time.time()
+    try:
+        with use_mesh(mesh) as ctx:
+            fn, args, donate = build_cell(cfg, shape, ctx)
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        mf = roofline.model_flops_for(cfg, shape)
+        floor = roofline.memory_floor_bytes(cfg, shape)
+        rf = roofline.analyze(cell, compiled, chips, model_flops=mf,
+                              bytes_floor=floor)
+        ma = compiled.memory_analysis()
+        row = rf.row()
+        row.update({
+            "status": "ok", "t_lower_s": round(t_lower, 1),
+            "t_compile_s": round(t_compile, 1),
+            "arg_gb_per_chip": ma.argument_size_in_bytes / 1e9,
+            "temp_gb_per_chip": ma.temp_size_in_bytes / 1e9,
+            "out_gb_per_chip": ma.output_size_in_bytes / 1e9,
+            "alias_gb_per_chip": ma.alias_size_in_bytes / 1e9,
+            "fits_16gb": row["peak_mem_gb_per_chip"] <= 16.0,
+            "collectives": dict(rf.coll.count_by_kind),
+        })
+        if verbose:
+            print(f"[ok] {cell}: peak {row['peak_mem_gb_per_chip']:.2f} GB/chip, "
+                  f"compute {row['t_compute_ms']:.1f} ms, "
+                  f"memory {row['t_memory_ms']:.1f} ms "
+                  f"(floor {row['t_memory_floor_ms']:.1f}), "
+                  f"collective {row['t_collective_ms']:.1f} ms, "
+                  f"bottleneck={row['bottleneck']}, "
+                  f"mfu_bound={row['mfu_bound']:.2%} "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        return row
+    except Exception as e:
+        if verbose:
+            print(f"[FAIL] {cell}: {type(e).__name__}: {str(e)[:300]}")
+            traceback.print_exc(limit=4)
+        return {"cell": cell, "status": "fail",
+                "error": f"{type(e).__name__}: {str(e)[:500]}"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    archs = list_configs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    rows = []
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for arch in archs:
+            for shape in shapes:
+                rows.append(run_cell(arch, shape, mesh))
+    ok = sum(r.get("status") == "ok" for r in rows)
+    skip = sum(r.get("status") == "skip" for r in rows)
+    fail = sum(r.get("status") == "fail" for r in rows)
+    print(f"\n== dry-run: {ok} ok, {skip} skip (documented), {fail} FAIL ==")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print("wrote", args.out)
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,390 @@
+"""Trip-count-aware cost analysis of optimized HLO text.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts each ``while`` body ONCE —
+useless for scan-over-layers programs (a 28-layer model reports 1 layer of
+FLOPs).  This module re-derives the three roofline inputs directly from the
+optimized HLO, multiplying loop bodies by their ``known_trip_count``:
+
+  * flops             — MXU work: dot ops (2 * prod(out) * prod(contracted));
+                        VPU elementwise flops are excluded (<2% here).
+  * hbm_bytes         — memory-traffic model: per materialized op,
+                        operand + output bytes at fusion boundaries, with
+                        in-place/gather special cases (dynamic-update-slice
+                        writes its slice, gather reads its rows, aliasing
+                        tuples/GTE/bitcast are free).
+  * collective bytes  — per-shard operand bytes of each collective op,
+                        grouped by kind, loop-multiplied.
+
+Shapes in SPMD-partitioned HLO are per-device, so all results are
+per-device; multiply by chip count for globals.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that move no data (aliases / bookkeeping).  `copy` is included: in
+# optimized while-loops XLA's copies implement double-buffering of loop
+# carries and are elided/in-place at runtime; counting them as full traffic
+# overstates HBM bytes ~2x (layout-change copies are undercounted instead —
+# acceptable for a roofline model, noted in EXPERIMENTS.md).
+_FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "opt-barrier", "partition-id", "replica-id", "iota",
+         "domain", "copy", "copy-start"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"%[\w\.\-]+")
+_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*")
+_KIND_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _parse_op_line(raw: str):
+    """'%name = TYPE opkind(args), attrs' -> (name, type_str, kind, rest)."""
+    m = _HEAD_RE.match(raw)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    if i < len(raw) and raw[i] == "(":           # tuple type: balanced parens
+        depth, j = 1, i + 1
+        while j < len(raw) and depth:
+            if raw[j] == "(":
+                depth += 1
+            elif raw[j] == ")":
+                depth -= 1
+            j += 1
+        type_str, rest0 = raw[i:j], raw[j:]
+    else:                                         # simple shape up to space
+        m2 = re.match(r"[\w\[\],]+(?:\{[^}]*\})?", raw[i:])
+        if not m2:
+            return None
+        type_str, rest0 = m2.group(0), raw[i + m2.end():]
+    m3 = _KIND_RE.match(rest0)
+    if not m3:
+        return None
+    return name, type_str, m3.group(1), rest0[m3.end():]
+
+
+def _parse_shapes(type_str: str):
+    """'bf16[2,3]{1,0}' or '(f32[2], s32[])' -> [( dtype, [dims] ), ...]"""
+    return [(dt, [int(d) for d in dims.split(",")] if dims else [])
+            for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _shape_bytes(shapes) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    out_shapes: list
+    operands: list
+    line: str
+
+    def attr_dims(self, key):
+        m = re.search(key + r"=\{([\d,]*)\}", self.line)
+        if not m or not m.group(1):
+            return []
+        return [int(x) for x in m.group(1).split(",")]
+
+    @property
+    def trip_count(self):
+        m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', self.line)
+        return int(m.group(1)) if m else 1
+
+    def called(self):
+        """computations referenced via calls= / body= / condition= / to_apply="""
+        out = {}
+        for key in ("calls", "body", "condition", "to_apply"):
+            m = re.search(key + r"=(%[\w\.\-]+)", self.line)
+            if m:
+                out[key] = m.group(1)
+        return out
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # %name -> out shapes
+    root: Op | None = None
+
+
+# component attribution: source function names appearing in op metadata
+TAGS = {
+    "attention": ("attn_core",),
+    "moe": ("moe_core",),
+    "wkv": ("wkv_core",),
+    "rglru": ("rglru_core",),
+    "loss": ("loss_xent",),
+    "optimizer": ("optimizer_update",),
+}
+
+
+def _tag_of(line: str) -> str:
+    m = re.search(r'op_name="([^"]*)"', line)
+    if not m:
+        return "other"
+    path = m.group(1)
+    for tag, pats in TAGS.items():
+        if any(p in path for p in pats):
+            return tag
+    return "other"
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=dict)
+    coll_count: dict = field(default_factory=dict)
+    bytes_by_tag: dict = field(default_factory=dict)
+    flops_by_tag: dict = field(default_factory=dict)
+
+    def _bump(self, tag: str, b: float = 0.0, f: float = 0.0):
+        if b:
+            self.bytes_by_tag[tag] = self.bytes_by_tag.get(tag, 0.0) + b
+        if f:
+            self.flops_by_tag[tag] = self.flops_by_tag.get(tag, 0.0) + f
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.hbm_bytes += mult * other.hbm_bytes
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + mult * v
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0.0) + mult * v
+        for k, v in other.bytes_by_tag.items():
+            self.bytes_by_tag[k] = self.bytes_by_tag.get(k, 0.0) + mult * v
+        for k, v in other.flops_by_tag.items():
+            self.flops_by_tag[k] = self.flops_by_tag.get(k, 0.0) + mult * v
+
+    @property
+    def coll_total(self):
+        return sum(self.coll_bytes.values())
+
+
+def parse_module(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo_text.splitlines():
+        if not raw.strip():
+            continue
+        if not raw.startswith(" ") and raw.rstrip().endswith("{"):
+            # computation header: '%name (..) -> .. {' or 'ENTRY %name (..) .. {'
+            m = _NAME_RE.search(raw)
+            if m:
+                cur = Computation("ENTRY" if raw.startswith("ENTRY") else m.group(0))
+                comps[cur.name] = cur
+                if raw.startswith("ENTRY"):
+                    comps[m.group(0)] = cur
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_op_line(raw)
+        if not parsed:
+            continue
+        name, type_str, kind, rest = parsed
+        out_shapes = _parse_shapes(type_str)
+        # operand names: up to the closing paren of the op call
+        depth, i = 1, 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operands = _NAME_RE.findall(rest[:i])
+        op = Op(name, kind, out_shapes, operands, raw)
+        cur.ops.append(op)
+        cur.shapes[name] = out_shapes
+        if raw.lstrip().startswith("ROOT"):
+            cur.root = op
+    return comps
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = 1.0
+    for _, dims in op.out_shapes:
+        for d in dims:
+            out_elems *= d
+    lhs = comp.shapes.get(op.operands[0]) if op.operands else None
+    if not lhs:
+        return 0.0
+    lhs_dims = lhs[0][1]
+    contracted = 1.0
+    for d in op.attr_dims("lhs_contracting_dims"):
+        if d < len(lhs_dims):
+            contracted *= lhs_dims[d]
+    return 2.0 * out_elems * contracted
+
+
+def _operand_bytes(op: Op, comp: Computation, skip=()):
+    total = 0.0
+    for o in op.operands:
+        if o in skip:
+            continue
+        sh = comp.shapes.get(o)
+        if sh:
+            total += _shape_bytes(sh)
+    return total
+
+
+def _fusion_bytes(op: Op, comp: Computation, sub: Computation) -> float:
+    """Memory traffic of one fusion call.
+
+    Loop bodies routinely pass whole loop-carried stacks (e.g. the (L, ...)
+    parameter stack or a scan-ys buffer) into fusions that only
+    dynamic-slice one layer out of them, or dynamic-update-slice one slot
+    in place.  Counting the full operand per iteration overestimates HBM
+    traffic by ~100x, so reads are sized by how each parameter is consumed.
+    """
+    read = 0.0
+    dus_ops = [o for o in sub.ops if o.kind == "dynamic-update-slice"]
+    dus_buffers = {o.operands[0] for o in dus_ops if o.operands}
+    for pop in sub.ops:
+        if pop.kind != "parameter":
+            continue
+        m = re.search(r"parameter\((\d+)\)", pop.line)
+        if not m:
+            continue
+        idx = int(m.group(1))
+        site = comp.shapes.get(op.operands[idx]) if idx < len(op.operands) else None
+        full = _shape_bytes(site) if site else _shape_bytes(pop.out_shapes)
+        consumers = [o for o in sub.ops if pop.name in o.operands]
+        if pop.name in dus_buffers:
+            pass  # in-place updated buffer: write counted below
+        elif consumers and all(o.kind in ("dynamic-slice", "gather") for o in consumers):
+            read += sum(_shape_bytes(o.out_shapes) for o in consumers)
+        else:
+            read += full
+    if dus_ops:
+        # in-place slot updates: traffic = the updated slices (read+write of
+        # the slice region at most), not the whole buffer
+        write = sum(_shape_bytes(sub.shapes.get(o.operands[1], []))
+                    for o in dus_ops if len(o.operands) > 1)
+    else:
+        write = _shape_bytes(op.out_shapes)
+    return read + write
+
+
+def _comp_cost(comp: Computation, comps, memo, inside_fusion=False) -> Cost:
+    mkey = (comp.name, inside_fusion)
+    if mkey in memo:
+        return memo[mkey]
+    c = Cost()
+    for op in comp.ops:
+        k = op.kind
+        base = k[:-6] if k.endswith("-start") else k
+        if base in COLLECTIVES:
+            b = _operand_bytes(op, comp)
+            c.coll_bytes[base] = c.coll_bytes.get(base, 0.0) + b
+            c.coll_count[base] = c.coll_count.get(base, 0.0) + 1
+            c.hbm_bytes += b + _shape_bytes(op.out_shapes)
+            c._bump(_tag_of(op.line), b=b + _shape_bytes(op.out_shapes))
+            continue
+        if k.endswith("-done") or k in _FREE:
+            continue
+        if k == "while":
+            refs = op.called()
+            body = comps.get(refs.get("body", ""))
+            if body:
+                c.add(_comp_cost(body, comps, memo), op.trip_count)
+            continue
+        if k == "conditional":
+            for refs in re.findall(r"branch_computations=\{([^}]*)\}", op.line):
+                for ref in _NAME_RE.findall(refs):
+                    sub = comps.get(ref)
+                    if sub:
+                        c.add(_comp_cost(sub, comps, memo))
+            continue
+        if k in ("fusion", "call", "custom-call", "map", "reduce", "sort",
+                 "reduce-window", "scatter", "select-and-scatter"):
+            refs = op.called()
+            sub = comps.get(refs.get("calls") or refs.get("to_apply") or "")
+            if sub is not None and sub.name != comp.name:
+                sc = _comp_cost(sub, comps, memo, inside_fusion=True)
+                c.flops += sc.flops          # dots inside fusions still run
+                c._bump(_tag_of(op.line), f=sc.flops)
+                c.add(Cost(coll_bytes=dict(sc.coll_bytes),
+                           coll_count=dict(sc.coll_count)))
+            if not inside_fusion:
+                b = (_fusion_bytes(op, comp, sub) if sub is not None
+                     else _operand_bytes(op, comp) + _shape_bytes(op.out_shapes))
+                c.hbm_bytes += b
+                c._bump(_tag_of(op.line), b=b)
+            continue
+        if k == "dot":
+            f = _dot_flops(op, comp)
+            c.flops += f
+            c._bump(_tag_of(op.line), f=f)
+            if not inside_fusion:
+                b = _operand_bytes(op, comp) + _shape_bytes(op.out_shapes)
+                c.hbm_bytes += b
+                c._bump(_tag_of(op.line), b=b)
+            continue
+        if k == "convolution":
+            # flops = 2 * out_elems * (kernel spatial * in_channels)
+            rhs = comp.shapes.get(op.operands[1]) if len(op.operands) > 1 else None
+            out_elems = 1.0
+            for _, dims in op.out_shapes:
+                for d in dims:
+                    out_elems *= d
+            if rhs:
+                kelems = 1.0
+                for d in rhs[0][1]:
+                    kelems *= d
+                odims = op.out_shapes[0][1]
+                kelems = kelems / (odims[-1] if odims else 1.0)
+                c.flops += 2.0 * out_elems * max(kelems, 1.0)
+            if not inside_fusion:
+                c.hbm_bytes += _operand_bytes(op, comp) + _shape_bytes(op.out_shapes)
+            continue
+        if inside_fusion:
+            continue
+        # default materialized op
+        if k in ("gather", "dynamic-slice"):
+            b = 2 * _shape_bytes(op.out_shapes)
+        elif k == "dynamic-update-slice":
+            upd = comp.shapes.get(op.operands[1]) if len(op.operands) > 1 else None
+            b = 2 * _shape_bytes(upd) if upd else _shape_bytes(op.out_shapes)
+        else:
+            b = _operand_bytes(op, comp) + _shape_bytes(op.out_shapes)
+        c.hbm_bytes += b
+        c._bump(_tag_of(op.line), b=b)
+    memo[comp.name] = c
+    return c
+
+
+def analyze_hlo(hlo_text: str) -> Cost:
+    comps = parse_module(hlo_text)
+    entry = comps.get("ENTRY")
+    if entry is None:
+        return Cost()
+    # memo shared; fusion-internal marking handled per call — conservative:
+    # compute twice (fusion-internal results only used for flops/collectives)
+    return _comp_cost(entry, comps, {})

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (v5e pod);
+multi-pod: 2x16x16 = 512 chips with a leading "pod" axis over DCI.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devs)} — the dry-run "
+            "entrypoint must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests)."""
+    n = data * model
+    devs = jax.devices()[:n]
+    return jax.make_mesh((data, model), ("data", "model"), devices=devs)

@@ -1,0 +1,54 @@
+"""Serving launcher: batched prefill + decode for any assigned arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_configs
+from repro.models import encdec, lm, steps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_configs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    init = encdec.init_params if cfg.enc_dec else lm.init_params
+    params = init(jax.random.key(0), cfg)
+    B, P, N = args.batch, args.prompt_len, args.tokens
+    decode = jax.jit(steps.make_decode_step(cfg))
+
+    if cfg.enc_dec:
+        frames = jnp.zeros((B, P + N, cfg.d_model), cfg.dtype)
+        enc_out = encdec.encode(params, cfg, frames)
+        ck, cv = encdec.build_cross_cache(params, cfg, enc_out)
+        cache = encdec.init_cache(cfg, B, P + N, P + N)
+        cache["cross_k"], cache["cross_v"] = ck, cv
+        pos0 = 0
+    else:
+        prompt = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab)
+        x = lm.embed_tokens(params, cfg, prompt)
+        _, cache = lm.prefill(params, cfg, x, extra_len=N, q_chunk=16)
+        pos0 = P
+
+    tok = jnp.zeros((B, 1), jnp.int32)
+    t0 = time.perf_counter()
+    for t in range(N):
+        logits, cache = decode(params, cache, tok, jnp.int32(pos0 + t))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    dt = time.perf_counter() - t0
+    print(f"{cfg.name}: {B * N / dt:.1f} tok/s (batch {B}, reduced, CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Encoder-decoder transformer (whisper-small backbone).
+
+The audio conv frontend is a stub per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, S, D) to the encoder.  Sinusoidal positions
+(whisper uses sinusoidal encoder positions; we use them on both sides and
+note the deviation from its learned decoder positions in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import annotate
+from repro.models.attention import (attend, attention_block,
+                                    attention_decode_block, decode_attend,
+                                    init_attention, output_proj)
+from repro.models.layers import (apply_norm, embed_init, init_mlp, init_norm,
+                                 init_norm_stacked, mlp)
+
+
+def sinusoid(seq_len: int, d_model: int, dtype=jnp.float32):
+    pos = np.arange(seq_len)[:, None]
+    dim = np.arange(0, d_model, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d_model)
+    out = np.zeros((seq_len, d_model), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out, dtype)
+
+
+def _init_layer(key, cfg: ModelConfig, stack, cross: bool):
+    ks = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    n = stack[0]
+    p = {
+        "ln1": init_norm_stacked(ks[0], n, cfg.d_model, cfg.norm),
+        "attn": init_attention(ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dtype, qkv_bias=cfg.qkv_bias,
+                               bias=cfg.bias, stack=stack),
+        "ln2": init_norm_stacked(ks[2], n, cfg.d_model, cfg.norm),
+        "mlp": init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act, dtype,
+                        bias=cfg.bias, stack=stack),
+    }
+    if cross:
+        p["ln_x"] = init_norm_stacked(ks[4], n, cfg.d_model, cfg.norm)
+        p["xattn"] = init_attention(ks[5], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim, dtype,
+                                    qkv_bias=cfg.qkv_bias, bias=cfg.bias,
+                                    stack=stack)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "embed": embed_init(ks[0], (cfg.vocab, cfg.d_model), dtype),
+        "unembed": embed_init(ks[1], (cfg.d_model, cfg.vocab), dtype),
+        "enc": {"blocks": _init_layer(ks[2], cfg, (cfg.n_enc_layers,), cross=False),
+                "final_norm": init_norm(ks[3], cfg.d_model, cfg.norm)},
+        "dec": {"blocks": _init_layer(ks[4], cfg, (cfg.n_layers,), cross=True),
+                "final_norm": init_norm(ks[5], cfg.d_model, cfg.norm)},
+    }
+
+
+def _xattn(x, lp, cfg, enc_out):
+    """Cross attention: q from x, k/v from encoder output."""
+    B, S, _ = x.shape
+    Te = enc_out.shape[1]
+    q = x @ lp["wq"]
+    if "bq" in lp:
+        q = q + lp["bq"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = (enc_out @ lp["wk"]).reshape(B, Te, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ lp["wv"]).reshape(B, Te, cfg.n_kv_heads, cfg.head_dim)
+    if "bk" in lp:
+        k = k + lp["bk"].reshape(1, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = v + lp["bv"].reshape(1, 1, cfg.n_kv_heads, cfg.head_dim)
+    o = attend(q, k, v, causal=False, q_chunk=512)
+    return output_proj(o, lp)
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, S, D) stub embeddings -> encoder hidden."""
+    x = frames + sinusoid(frames.shape[1], cfg.d_model, frames.dtype)[None]
+    x = annotate(x, "batch", None, None)
+
+    def body(h, lp):
+        a, _ = attention_block(apply_norm(h, lp["ln1"], cfg.norm), lp["attn"],
+                               cfg, causal=False)
+        h = h + a
+        h = h + mlp(apply_norm(h, lp["ln2"], cfg.norm), lp["mlp"], cfg.act)
+        return annotate(h, "batch", None, None), None
+
+    body_fn = jax.checkpoint(lambda h, lp: body(h, lp)) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"]["blocks"])
+    return apply_norm(x, params["enc"]["final_norm"], cfg.norm)
+
+
+def decode_train(params, cfg: ModelConfig, tok_embeds, enc_out):
+    """Teacher-forced decoder pass. tok_embeds: (B, S, D)."""
+    x = tok_embeds + sinusoid(tok_embeds.shape[1], cfg.d_model, tok_embeds.dtype)[None]
+
+    def body(h, lp):
+        a, _ = attention_block(apply_norm(h, lp["ln1"], cfg.norm), lp["attn"],
+                               cfg, causal=True)
+        h = h + a
+        h = h + _xattn(apply_norm(h, lp["ln_x"], cfg.norm), lp["xattn"], cfg, enc_out)
+        h = h + mlp(apply_norm(h, lp["ln2"], cfg.norm), lp["mlp"], cfg.act)
+        return annotate(h, "batch", None, None), None
+
+    body_fn = jax.checkpoint(lambda h, lp: body(h, lp)) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec"]["blocks"])
+    return apply_norm(x, params["dec"]["final_norm"], cfg.norm)
+
+
+def forward(params, cfg: ModelConfig, frames, tok_embeds):
+    enc_out = encode(params, cfg, frames)
+    return decode_train(params, cfg, tok_embeds, enc_out), jnp.zeros((), jnp.float32)
+
+
+# --- decode-time --------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "self": {"k": jnp.zeros((L, batch, max_len, K, hd), dtype),
+                 "v": jnp.zeros((L, batch, max_len, K, hd), dtype)},
+        "cross_k": jnp.zeros((L, batch, enc_len, K, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, enc_len, K, hd), dtype),
+    }
+
+
+def build_cross_cache(params, cfg: ModelConfig, enc_out):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    B, Te, _ = enc_out.shape
+
+    def one(lp):
+        k = (enc_out @ lp["xattn"]["wk"]).reshape(B, Te, cfg.n_kv_heads, cfg.head_dim)
+        v = (enc_out @ lp["xattn"]["wv"]).reshape(B, Te, cfg.n_kv_heads, cfg.head_dim)
+        return k, v
+
+    ks, vs = jax.vmap(one)(params["dec"]["blocks"])
+    return ks, vs
+
+
+def decode_one(params, cfg: ModelConfig, x, cache, pos):
+    """One decoder token. x: (B,1,D)."""
+    x = x + sinusoid_at(pos, cfg.d_model, x.dtype)
+
+    def body(h, xs):
+        lp, sc, ck, cv = xs
+        a, sc = attention_decode_block(apply_norm(h, lp["ln1"], cfg.norm),
+                                       lp["attn"], cfg, sc, pos)
+        h = h + a
+        hx = apply_norm(h, lp["ln_x"], cfg.norm)
+        B = hx.shape[0]
+        q = hx @ lp["xattn"]["wq"]
+        if "bq" in lp["xattn"]:
+            q = q + lp["xattn"]["bq"]
+        q = q.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        o = decode_attend(q, ck, cv, ck.shape[1] - 1)
+        h = h + output_proj(o, lp["xattn"])
+        h = h + mlp(apply_norm(h, lp["ln2"], cfg.norm), lp["mlp"], cfg.act)
+        return h, sc
+
+    x, self_c = jax.lax.scan(
+        body, x, (params["dec"]["blocks"], cache["self"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = apply_norm(x, params["dec"]["final_norm"], cfg.norm)
+    return x, {"self": self_c, "cross_k": cache["cross_k"],
+               "cross_v": cache["cross_v"]}
+
+
+def sinusoid_at(pos, d_model, dtype):
+    dim = jnp.arange(0, d_model, 2, jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d_model)
+    out = jnp.zeros((d_model,), jnp.float32)
+    out = out.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+    return out.astype(dtype)[None, None, :]

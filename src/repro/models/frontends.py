@@ -1,0 +1,29 @@
+"""Modality frontends for [vlm]/[audio] architectures — STUBS per assignment.
+
+The backbone consumes precomputed patch/frame embeddings; ``input_specs()``
+(launch/dryrun.py) provides (B, S, d_model) ShapeDtypeStructs.  For smoke
+tests and examples, the stubs below produce deterministic embeddings from a
+tiny linear projection of synthetic patches/frames, exercising the same
+entry point the real CLIP/conv frontend would use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+PATCH_DIM = 64     # stub "pixel patch" / "mel frame" feature size
+
+
+def init_frontend(key, d_model, dtype):
+    return {"proj": dense_init(key, (PATCH_DIM, d_model), dtype, PATCH_DIM)}
+
+
+def embed_patches(params, patches):
+    """patches: (B, S, PATCH_DIM) -> (B, S, D)."""
+    return patches @ params["proj"]
+
+
+def synthetic_patches(key, batch, seq, dtype=jnp.bfloat16):
+    return jax.random.normal(key, (batch, seq, PATCH_DIM), jnp.float32).astype(dtype)

@@ -1,0 +1,143 @@
+"""Shared neural-net building blocks (pure JAX, framework-free).
+
+All parameters are plain pytrees of jnp arrays.  Layer-stacked parameters
+carry a leading ``L`` dimension and are consumed by ``jax.lax.scan`` so that
+HLO size is O(1) in depth.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, dtype, stddev):
+    return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    """Truncated-normal-ish init, 1/sqrt(fan_in)."""
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    return _normal(key, shape, dtype, 1.0 / math.sqrt(max(fan_in, 1)))
+
+
+def embed_init(key, shape, dtype):
+    return _normal(key, shape, dtype, 0.02)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def init_norm(key, d, kind: str, dtype=jnp.float32):
+    del key
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.zeros((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def init_norm_stacked(key, n, d, kind: str, dtype=jnp.float32):
+    del key
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((n, d), dtype)}
+    return {"scale": jnp.zeros((n, d), dtype), "bias": jnp.zeros((n, d), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, act: str, dtype, bias: bool = False, stack: tuple = ()):
+    ks = jax.random.split(key, 3)
+    sh_in, sh_out = stack + (d_model, d_ff), stack + (d_ff, d_model)
+    p = {}
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[0], sh_in, dtype, d_model)
+    p["w_up"] = dense_init(ks[1], sh_in, dtype, d_model)
+    p["w_down"] = dense_init(ks[2], sh_out, dtype, d_ff)
+    if bias:
+        p["b_up"] = jnp.zeros(stack + (d_ff,), dtype)
+        p["b_down"] = jnp.zeros(stack + (d_model,), dtype)
+    return p
+
+
+def mlp(x, p, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:  # gelu
+        h = x @ p["w_up"]
+        if "b_up" in p:
+            h = h + p["b_up"]
+        h = jax.nn.gelu(h)
+    y = h @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, mask=None):
+    """logits: (..., V) fp32 recommended; labels int (...,). Returns mean loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,467 @@
+"""Decoder-only LM assembly for every assigned family.
+
+One parameter schema, four block families:
+  * ``attn``  — GQA transformer (dense MLP or MoE), uniform layers, scanned
+  * ``rwkv``  — RWKV6 time-mix/channel-mix, uniform layers, scanned
+  * hybrid    — repeating ``pattern`` (e.g. RecurrentGemma's rec,rec,attn),
+                scanned over pattern repetitions + unscanned tail
+Layer stacks carry a leading L (or n_repeats) dim consumed by ``lax.scan`` so
+HLO size is depth-independent.  ``forward`` (train/prefill) and ``decode_one``
+(single token against caches/recurrent state) share parameters.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import annotate
+from repro.models import rglru, rwkv6
+from repro.models.attention import (attention_block, attention_decode_block,
+                                    init_attention)
+from repro.models.layers import (apply_norm, embed_init, init_mlp,
+                                 init_norm, init_norm_stacked, mlp)
+from repro.models.moe import init_moe, moe_block
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _init_attn_layer(key, cfg: ModelConfig, stack, window=False):
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    p = {
+        "ln1": init_norm_stacked(ks[0], stack[0] if stack else 1, cfg.d_model, cfg.norm)
+               if stack else init_norm(ks[0], cfg.d_model, cfg.norm),
+        "attn": init_attention(ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dtype, qkv_bias=cfg.qkv_bias,
+                               qk_norm=cfg.qk_norm, bias=cfg.bias, stack=stack),
+        "ln2": init_norm_stacked(ks[2], stack[0] if stack else 1, cfg.d_model, cfg.norm)
+               if stack else init_norm(ks[2], cfg.d_model, cfg.norm),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(ks[3], cfg.d_model, cfg.moe, dtype, cfg.act, stack=stack)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act, dtype,
+                            bias=cfg.bias, stack=stack)
+    return p
+
+
+def _init_rwkv_layer(key, cfg: ModelConfig, stack):
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    n = stack[0] if stack else 1
+    return {
+        "ln1": init_norm_stacked(ks[0], n, cfg.d_model, cfg.norm),
+        "tm": rwkv6.init_time_mix(ks[1], cfg.d_model, dtype, stack=stack),
+        "ln2": init_norm_stacked(ks[2], n, cfg.d_model, cfg.norm),
+        "cm": rwkv6.init_channel_mix(ks[3], cfg.d_model, cfg.d_ff, dtype, stack=stack),
+    }
+
+
+def _init_rec_layer(key, cfg: ModelConfig, stack):
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    n = stack[0] if stack else 1
+    return {
+        "ln1": init_norm_stacked(ks[0], n, cfg.d_model, cfg.norm),
+        "rec": rglru.init_recurrent_block(ks[1], cfg.d_model,
+                                          cfg.d_rnn or cfg.d_model, dtype, stack=stack),
+        "ln2": init_norm_stacked(ks[2], n, cfg.d_model, cfg.norm),
+        "mlp": init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act, dtype, stack=stack),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    dtype = jnp.dtype(cfg.dtype)
+    p = {
+        "embed": embed_init(ks[0], (cfg.vocab, cfg.d_model), dtype),
+        "unembed": embed_init(ks[1], (cfg.d_model, cfg.vocab), dtype),
+        "final_norm": init_norm(ks[2], cfg.d_model, cfg.norm),
+    }
+    L = cfg.n_layers
+    if cfg.pattern:                                     # hybrid
+        k = len(cfg.pattern)
+        n_rep, n_tail = L // k, L % k
+        groups = {}
+        for i, kind in enumerate(cfg.pattern):
+            init = _init_rec_layer if kind == "rec" else _init_attn_layer
+            groups[f"p{i}_{kind}"] = init(ks[3 + i % 3], cfg, stack=(n_rep,))
+        p["blocks"] = {"repeat": groups}
+        if n_tail:
+            tail = {}
+            for i in range(n_tail):
+                kind = cfg.pattern[i]
+                init = _init_rec_layer if kind == "rec" else _init_attn_layer
+                tail[f"t{i}_{kind}"] = init(ks[6], cfg, stack=(1,))
+            p["blocks"]["tail"] = tail
+    elif cfg.block == "rwkv":
+        p["blocks"] = _init_rwkv_layer(ks[3], cfg, stack=(L,))
+        p["ln0"] = init_norm(ks[4], cfg.d_model, cfg.norm)
+    else:                                               # uniform attn / moe
+        p["blocks"] = _init_attn_layer(ks[3], cfg, stack=(L,))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Layer applications (single layer, unstacked params)
+# ---------------------------------------------------------------------------
+
+def _attn_layer_fwd(x, lp, cfg: ModelConfig, window: int, q_chunk: int):
+    # sequence-parallel TP: keep the residual stream sharded over `model`
+    # on the sequence dim between blocks — GSPMD then lowers the per-layer
+    # TP sync to reduce-scatter + all-gather instead of all-reduce (half
+    # the link bytes, Korthikanti et al.)
+    seq_ax = "seq_sp" if cfg.seq_parallel else None
+    x = annotate(x, "batch", seq_ax, None)
+    h = apply_norm(x, lp["ln1"], cfg.norm)
+    h, _ = attention_block(h, lp["attn"], cfg, window=window, q_chunk=q_chunk)
+    x = annotate(x + h, "batch", seq_ax, None)
+    h = apply_norm(x, lp["ln2"], cfg.norm)
+    if "moe" in lp:
+        h, losses = moe_block(h, lp["moe"], cfg.moe, cfg.act)
+        aux = losses["moe_aux"] + losses["moe_z"]
+    else:
+        h, aux = mlp(h, lp["mlp"], cfg.act), 0.0
+    return annotate(x + h, "batch", seq_ax, None), aux
+
+
+def _rwkv_layer_fwd(x, lp, cfg: ModelConfig):
+    B = x.shape[0]
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_size
+    z = jnp.zeros((B, D), x.dtype)
+    s0 = jnp.zeros((B, H, cfg.rwkv_head_size, cfg.rwkv_head_size), jnp.float32)
+    h = apply_norm(x, lp["ln1"], cfg.norm)
+    h, _ = rwkv6.time_mix(h, lp["tm"], cfg.rwkv_head_size, z, s0)
+    x = x + h
+    h = apply_norm(x, lp["ln2"], cfg.norm)
+    h, _ = rwkv6.channel_mix(h, lp["cm"], z)
+    return annotate(x + h, "batch", None, None), 0.0
+
+
+def _rec_layer_fwd(x, lp, cfg: ModelConfig):
+    h = apply_norm(x, lp["ln1"], cfg.norm)
+    h, _ = rglru.recurrent_block(h, lp["rec"])
+    x = x + h
+    h = apply_norm(x, lp["ln2"], cfg.norm)
+    h = mlp(h, lp["mlp"], cfg.act)
+    return annotate(x + h, "batch", None, None), 0.0
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, x, q_chunk: int = 512):
+    """x: (B, S, D) embeddings -> (hidden (B,S,D), aux_loss)."""
+    if cfg.pattern:
+        return _forward_hybrid(params, cfg, x, q_chunk)
+    if cfg.block == "rwkv":
+        x = apply_norm(x, params["ln0"], cfg.norm)
+        body = lambda c, lp: _acc(_rwkv_layer_fwd(c[0], lp, cfg), c[1])
+    else:
+        body = lambda c, lp: _acc(
+            _attn_layer_fwd(c[0], lp, cfg, cfg.window, q_chunk), c[1])
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(lambda c, lp: (body(c, lp), None),
+                               (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return x, aux
+
+
+def _acc(res, aux):
+    x, a = res
+    return (x, aux + a)
+
+
+def _forward_hybrid(params, cfg: ModelConfig, x, q_chunk: int):
+    groups = params["blocks"]["repeat"]
+
+    def body(carry, lps):
+        h, aux = carry
+        for name in sorted(lps):
+            lp = lps[name]
+            if name.endswith("rec"):
+                h, a = _rec_layer_fwd(h, lp, cfg)
+            else:
+                h, a = _attn_layer_fwd(h, lp, cfg, cfg.window, q_chunk)
+            aux = aux + a
+        return (h, aux)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(lambda c, lp: (body_fn(c, lp), None),
+                               (x, jnp.zeros((), jnp.float32)), groups)
+    for name, lp in sorted(params["blocks"].get("tail", {}).items()):
+        lp1 = jax.tree.map(lambda a: a[0], lp)
+        if name.endswith("rec"):
+            x, _ = _rec_layer_fwd(x, lp1, cfg)
+        else:
+            x, _ = _attn_layer_fwd(x, lp1, cfg, cfg.window, q_chunk)
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    emb = jnp.take(params["embed"], tokens, axis=0)
+    return annotate(emb, "batch", None, None)
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    lg = hidden @ params["unembed"]
+    return annotate(lg, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token) + cache construction
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode-time state for one model; pytree of arrays."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def attn_cache(n, length):
+        return {
+            "k": jnp.zeros((n, batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((n, batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+
+    def rec_state(n):
+        dr = cfg.d_rnn or cfg.d_model
+        return {"h": jnp.zeros((n, batch, dr), jnp.float32),
+                "conv": jnp.zeros((n, batch, rglru.CONV_W - 1, dr), jnp.float32)}
+
+    if cfg.pattern:
+        k = len(cfg.pattern)
+        n_rep, n_tail = cfg.n_layers // k, cfg.n_layers % k
+        length = min(cfg.window or max_len, max_len)
+        rep = {}
+        for i, kind in enumerate(cfg.pattern):
+            rep[f"p{i}_{kind}"] = rec_state(n_rep) if kind == "rec" else attn_cache(n_rep, length)
+        cache = {"repeat": rep}
+        if n_tail:
+            cache["tail"] = {f"t{i}_{cfg.pattern[i]}":
+                             (rec_state(1) if cfg.pattern[i] == "rec" else attn_cache(1, length))
+                             for i in range(n_tail)}
+        return cache
+    if cfg.block == "rwkv":
+        H = cfg.d_model // cfg.rwkv_head_size
+        return {
+            "tm_x": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dtype),
+            "wkv": jnp.zeros((cfg.n_layers, batch, H, cfg.rwkv_head_size,
+                              cfg.rwkv_head_size), jnp.float32),
+            "cm_x": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dtype),
+        }
+    return attn_cache(cfg.n_layers, max_len)
+
+
+def prefill(params, cfg: ModelConfig, x, extra_len: int = 0, q_chunk: int = 512):
+    """Run the trunk over a prompt and build the decode cache.
+
+    x: (B, S, D) embeddings.  Returns (hidden (B,S,D), cache) where attention
+    caches have length S + extra_len (extra room for decode continuation) or
+    ``cfg.window`` ring buffers for windowed layers.
+    """
+    B, S, _ = x.shape
+    if cfg.pattern:
+        return _prefill_hybrid(params, cfg, x, q_chunk)
+    if cfg.block == "rwkv":
+        return _prefill_rwkv(params, cfg, x)
+
+    def body(carry, lp):
+        h = apply_norm(carry, lp["ln1"], cfg.norm)
+        h, (k, v) = attention_block(h, lp["attn"], cfg, window=cfg.window,
+                                    q_chunk=q_chunk)
+        xo = carry + h
+        h = apply_norm(xo, lp["ln2"], cfg.norm)
+        if "moe" in lp:
+            h, _ = moe_block(h, lp["moe"], cfg.moe, cfg.act)
+        else:
+            h = mlp(h, lp["mlp"], cfg.act)
+        return annotate(xo + h, "batch", None, None), (k, v)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(body_fn, x, params["blocks"])
+    if extra_len:
+        pad = ((0, 0), (0, 0), (0, extra_len), (0, 0), (0, 0))
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return x, {"k": ks, "v": vs}
+
+
+def _ring_pack(k, window):
+    """Pack the last ``window`` entries of (B,S,K,hd) into ring-slot order:
+    slot j holds the most recent position p < S with p % window == j."""
+    B, S, K, hd = k.shape
+    j = jnp.arange(window)
+    p = S - 1 - jnp.mod(S - 1 - j, window)
+    valid = p >= 0
+    ring = jnp.take(k, jnp.clip(p, 0, S - 1), axis=1)
+    return jnp.where(valid[None, :, None, None], ring, jnp.zeros((), k.dtype))
+
+
+def _prefill_rwkv(params, cfg, x):
+    x = apply_norm(x, params["ln0"], cfg.norm)
+    B, S, D = x.shape
+    H = D // cfg.rwkv_head_size
+    z = jnp.zeros((B, D), x.dtype)
+    s0 = jnp.zeros((B, H, cfg.rwkv_head_size, cfg.rwkv_head_size), jnp.float32)
+
+    def body(carry, lp):
+        h = apply_norm(carry, lp["ln1"], cfg.norm)
+        h, (tmx, wkv) = rwkv6.time_mix(h, lp["tm"], cfg.rwkv_head_size, z, s0)
+        xo = carry + h
+        h = apply_norm(xo, lp["ln2"], cfg.norm)
+        h, cmx = rwkv6.channel_mix(h, lp["cm"], z)
+        return annotate(xo + h, "batch", None, None), \
+            {"tm_x": tmx, "wkv": wkv, "cm_x": cmx}
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, states = jax.lax.scan(body_fn, x, params["blocks"])
+    return apply_norm(x, params["final_norm"], cfg.norm), states
+
+
+def _prefill_hybrid(params, cfg, x, q_chunk):
+    groups = params["blocks"]["repeat"]
+    W = cfg.window
+
+    def run_layer(h, name, lp):
+        if name.endswith("rec"):
+            hn = apply_norm(h, lp["ln1"], cfg.norm)
+            y, st = rglru.recurrent_block(hn, lp["rec"])
+            h = h + y
+            h = h + mlp(apply_norm(h, lp["ln2"], cfg.norm), lp["mlp"], cfg.act)
+            return h, st
+        hn = apply_norm(h, lp["ln1"], cfg.norm)
+        y, (k, v) = attention_block(hn, lp["attn"], cfg, window=W, q_chunk=q_chunk)
+        h = h + y
+        h = h + mlp(apply_norm(h, lp["ln2"], cfg.norm), lp["mlp"], cfg.act)
+        return h, {"k": _ring_pack(k, W), "v": _ring_pack(v, W)}
+
+    def body(h, lps):
+        sts = {}
+        for name in sorted(lps):
+            h, sts[name] = run_layer(h, name, lps[name])
+        return h, sts
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, rep_states = jax.lax.scan(body_fn, x, groups)
+    cache = {"repeat": rep_states}
+    if "tail" in params["blocks"]:
+        tail = {}
+        for name in sorted(params["blocks"]["tail"]):
+            lp = jax.tree.map(lambda a: a[0], params["blocks"]["tail"][name])
+            x, st = run_layer(x, name, lp)
+            tail[name] = jax.tree.map(lambda a: a[None], st)
+        cache["tail"] = tail
+    return apply_norm(x, params["final_norm"], cfg.norm), cache
+
+
+def _attn_layer_decode(x, lp, cfg, cache, pos, window):
+    h = apply_norm(x, lp["ln1"], cfg.norm)
+    h, cache = attention_decode_block(h, lp["attn"], cfg, cache, pos, window=window)
+    x = x + h
+    h = apply_norm(x, lp["ln2"], cfg.norm)
+    if "moe" in lp:
+        h, _ = moe_block(h, lp["moe"], cfg.moe, cfg.act)
+    else:
+        h = mlp(h, lp["mlp"], cfg.act)
+    return x + h, cache
+
+
+def decode_one(params, cfg: ModelConfig, x, cache, pos):
+    """x: (B, 1, D) current-token embedding; returns (hidden (B,1,D), cache).
+
+    The stacked KV cache rides the scan CARRY and is updated in place with
+    dynamic-update-slice — passing it through scan xs/ys would double-buffer
+    the full multi-GB cache in temps (observed +2.7x peak memory).
+    """
+    if cfg.pattern:
+        return _decode_hybrid(params, cfg, x, cache, pos)
+    if cfg.block == "rwkv":
+        return _decode_rwkv(params, cfg, x, cache)
+
+    kv_ax = ("batch", "kv_seq", None, None)
+
+    def body(carry, lp):
+        h, full_cache, l = carry
+        c_l = jax.tree.map(
+            lambda a: annotate(jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False),
+                               *kv_ax),
+            full_cache)
+        h2, c_new = _attn_layer_decode(h, lp, cfg, c_l, pos, cfg.window)
+        full_cache = jax.tree.map(
+            lambda buf, n: annotate(jax.lax.dynamic_update_index_in_dim(
+                buf, annotate(n.astype(buf.dtype), *kv_ax), l, 0),
+                None, *kv_ax),
+            full_cache, c_new)
+        return (h2, full_cache, l + 1), None
+
+    (x, cache, _), _ = jax.lax.scan(body, (x, cache, jnp.int32(0)),
+                                    params["blocks"])
+    return apply_norm(x, params["final_norm"], cfg.norm), cache
+
+
+def _decode_rwkv(params, cfg, x, state):
+    xb = apply_norm(x[:, 0, :], params["ln0"], cfg.norm)
+
+    def body(h, xs):
+        lp, st = xs
+        hn = apply_norm(h, lp["ln1"], cfg.norm)
+        y, (tmx, wkv) = rwkv6._time_mix_one(hn, lp["tm"], cfg.rwkv_head_size,
+                                            st["tm_x"], st["wkv"])
+        h = h + y
+        hn = apply_norm(h, lp["ln2"], cfg.norm)
+        y, cmx = rwkv6.channel_mix_step(hn, lp["cm"], st["cm_x"])
+        return h + y, {"tm_x": tmx, "wkv": wkv, "cm_x": cmx}
+
+    xb, state = jax.lax.scan(body, xb, (params["blocks"], state))
+    return apply_norm(xb, params["final_norm"], cfg.norm)[:, None, :], state
+
+
+def _decode_hybrid(params, cfg, x, cache, pos):
+    groups = params["blocks"]["repeat"]
+
+    def body(h, xs):
+        lps, cs = xs
+        new_c = {}
+        for name in sorted(lps):
+            lp, c = lps[name], cs[name]
+            if name.endswith("rec"):
+                hn = apply_norm(h[:, 0, :], lp["ln1"], cfg.norm)
+                y, c = rglru.recurrent_block_step(hn, lp["rec"], c)
+                h = h + y[:, None, :]
+                hn = apply_norm(h, lp["ln2"], cfg.norm)
+                h = h + mlp(hn, lp["mlp"], cfg.act)
+            else:
+                h, c = _attn_layer_decode(h, lp, cfg, c, pos, cfg.window)
+            new_c[name] = c
+        return h, new_c
+
+    x, rep_cache = jax.lax.scan(body, x, (groups, cache["repeat"]))
+    new_cache = {"repeat": rep_cache}
+    if "tail" in params["blocks"]:
+        tail_c = {}
+        for name in sorted(params["blocks"]["tail"]):
+            lp = jax.tree.map(lambda a: a[0], params["blocks"]["tail"][name])
+            c = jax.tree.map(lambda a: a[0], cache["tail"][name])
+            if name.endswith("rec"):
+                hn = apply_norm(x[:, 0, :], lp["ln1"], cfg.norm)
+                y, c = rglru.recurrent_block_step(hn, lp["rec"], c)
+                x = x + y[:, None, :]
+                hn = apply_norm(x, lp["ln2"], cfg.norm)
+                x = x + mlp(hn, lp["mlp"], cfg.act)
+            else:
+                x, c = _attn_layer_decode(x, lp, cfg, c, pos, cfg.window)
+            tail_c[name] = jax.tree.map(lambda a: a[None], c)
+        new_cache["tail"] = tail_c
+    return apply_norm(x, params["final_norm"], cfg.norm), new_cache

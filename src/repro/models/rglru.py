@@ -1,0 +1,104 @@
+"""Griffin / RecurrentGemma recurrent blocks: causal conv + RG-LRU.
+
+Training parallelises the gated linear recurrence with
+``jax.lax.associative_scan`` over time (elementwise channels — the TPU-native
+replacement for a CUDA sequential kernel); decode is the exact single-step
+update with O(d_rnn) state, which makes recurrentgemma long_500k-capable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import annotate
+from repro.models.layers import dense_init
+
+RG_C = 8.0
+CONV_W = 4
+
+
+def init_recurrent_block(key, d_model, d_rnn, dtype, stack: tuple = ()):
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], stack + (d_model, d_rnn), dtype, d_model),
+        "w_gate_in": dense_init(ks[1], stack + (d_model, d_rnn), dtype, d_model),
+        "conv_w": dense_init(ks[2], stack + (CONV_W, d_rnn), jnp.float32, CONV_W),
+        "conv_b": jnp.zeros(stack + (d_rnn,), jnp.float32),
+        "w_a": dense_init(ks[3], stack + (d_rnn, d_rnn), dtype, d_rnn),
+        "b_a": jnp.zeros(stack + (d_rnn,), jnp.float32),
+        "w_x": dense_init(ks[4], stack + (d_rnn, d_rnn), dtype, d_rnn),
+        "b_x": jnp.zeros(stack + (d_rnn,), jnp.float32),
+        # softplus(lambda_p) ~ 0.1..0.3 -> a ~ exp(-8*0.2*r)
+        "lambda_p": jnp.full(stack + (d_rnn,), -1.0, jnp.float32),
+        "w_out": dense_init(ks[5], stack + (d_rnn, d_model), dtype, d_rnn),
+    }
+
+
+def causal_conv(x, w, b, x_prev=None):
+    """Depthwise causal conv, width 4. x: (B,T,C) fp32; x_prev: (B,3,C)."""
+    B, T, C = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, CONV_W - 1, C), x.dtype)
+    xp = jnp.concatenate([x_prev, x], axis=1)              # (B, T+3, C)
+    y = sum(w[j][None, None, :] * jax.lax.dynamic_slice_in_dim(xp, j, T, axis=1)
+            for j in range(CONV_W))
+    return y + b, xp[:, -(CONV_W - 1):, :]
+
+
+def _gates(x, p):
+    r = jax.nn.sigmoid(x @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(x @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -RG_C * jax.nn.softplus(p["lambda_p"]) * r
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8)) * (i * x)
+    return a, gated_x
+
+
+def rglru(x, p, h0):
+    """x: (B,T,Dr) fp32; h0: (B,Dr). Returns (h_all (B,T,Dr), h_last)."""
+    a, b = _gates(x, p)
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    with jax.named_scope("rglru_core"):
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]
+
+
+def rglru_step(x, p, h0):
+    """x: (B,Dr) fp32 one token."""
+    a, b = _gates(x[:, None, :], p)
+    h = a[:, 0] * h0 + b[:, 0]
+    return h, h
+
+
+def recurrent_block(x, p, state=None):
+    """Full Griffin temporal block. x: (B,T,D).
+
+    state: None (train) or {"h": (B,Dr), "conv": (B,3,Dr)}.
+    Returns (y (B,T,D), new_state).
+    """
+    B, T, D = x.shape
+    gate = jax.nn.gelu(x @ p["w_gate_in"])
+    h = (x @ p["w_in"]).astype(jnp.float32)
+    h = annotate(h, "batch", None, "rnn")
+    h0 = state["h"] if state is not None else jnp.zeros((B, h.shape[-1]), jnp.float32)
+    cp = state["conv"] if state is not None else None
+    h, conv_state = causal_conv(h, p["conv_w"], p["conv_b"], cp)
+    h, h_last = rglru(h, p, h0)
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y, {"h": h_last, "conv": conv_state}
+
+
+def recurrent_block_step(x, p, state):
+    """Decode one token. x: (B,D); state {"h": (B,Dr), "conv": (B,3,Dr)}."""
+    gate = jax.nn.gelu(x @ p["w_gate_in"])
+    h = (x @ p["w_in"]).astype(jnp.float32)
+    h3, conv_state = causal_conv(h[:, None, :], p["conv_w"], p["conv_b"], state["conv"])
+    h1, h_last = rglru_step(h3[:, 0, :], p, state["h"])
+    y = (h1.astype(x.dtype) * gate) @ p["w_out"]
+    return y, {"h": h_last, "conv": conv_state}

@@ -1,0 +1,217 @@
+"""RWKV-6 ("Finch") blocks: data-dependent decay linear attention.
+
+Training uses a chunked formulation (GLA-style): within a chunk the WKV
+recurrence is expressed as masked matmuls with per-channel decay factors in
+log-space; across chunks an (N x N) state per head is carried by
+``lax.scan``.  Decode is the exact single-step recurrence — state is O(H*N*N)
+per layer, independent of context length, which is why rwkv6 is the
+long_500k-capable arch.
+
+All WKV math runs in fp32 (decays are exponentials); projections stay in the
+model dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import annotate
+from repro.models.layers import dense_init
+
+LORA_MIX = 32     # rank of the per-(r,w,k,v,g) token-shift loras
+LORA_DECAY = 64   # rank of the decay lora
+MIX_KINDS = 5     # r, w, k, v, g
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_time_mix(key, d_model, dtype, stack: tuple = ()):
+    ks = jax.random.split(key, 10)
+    D = d_model
+    return {
+        "mu_x": jnp.zeros(stack + (D,), jnp.float32),
+        "mix_w1": dense_init(ks[0], stack + (D, MIX_KINDS * LORA_MIX), jnp.float32, D),
+        "mix_w2": dense_init(ks[1], stack + (MIX_KINDS, LORA_MIX, D), jnp.float32, LORA_MIX),
+        "w0": -6.0 * jnp.ones(stack + (D,), jnp.float32),
+        "wA": dense_init(ks[2], stack + (D, LORA_DECAY), jnp.float32, D),
+        "wB": dense_init(ks[3], stack + (LORA_DECAY, D), jnp.float32, LORA_DECAY),
+        "u": 0.5 * jnp.ones(stack + (D,), jnp.float32),
+        "w_r": dense_init(ks[4], stack + (D, D), dtype, D),
+        "w_k": dense_init(ks[5], stack + (D, D), dtype, D),
+        "w_v": dense_init(ks[6], stack + (D, D), dtype, D),
+        "w_g": dense_init(ks[7], stack + (D, D), dtype, D),
+        "w_o": dense_init(ks[8], stack + (D, D), dtype, D),
+        "ln_x_scale": jnp.zeros(stack + (D,), jnp.float32),
+        "ln_x_bias": jnp.zeros(stack + (D,), jnp.float32),
+    }
+
+
+def init_channel_mix(key, d_model, d_ff, dtype, stack: tuple = ()):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros(stack + (d_model,), jnp.float32),
+        "mu_r": jnp.zeros(stack + (d_model,), jnp.float32),
+        "w_in": dense_init(ks[0], stack + (d_model, d_ff), dtype, d_model),
+        "w_out": dense_init(ks[1], stack + (d_ff, d_model), dtype, d_ff),
+        "w_r": dense_init(ks[2], stack + (d_model, d_model), dtype, d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Token shift
+# ---------------------------------------------------------------------------
+
+def _shift(x, x_prev):
+    """x: (B, T, D); x_prev: (B, D) last token of previous segment."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def ddlerp(x, xx, p):
+    """Data-dependent token-shift mixing -> (x_r, x_w, x_k, x_v, x_g)."""
+    sx = (xx - x).astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    base = x32 + sx * p["mu_x"]
+    m = jnp.tanh(base @ p["mix_w1"])                       # (B,T,5*R)
+    m = m.reshape(m.shape[:-1] + (MIX_KINDS, LORA_MIX))
+    offs = jnp.einsum("btkr,krd->kbtd", m, p["mix_w2"])    # (5,B,T,D)
+    outs = [(x32 + sx * (p["mu_x"] + offs[i])).astype(x.dtype) for i in range(MIX_KINDS)]
+    return outs  # r, w, k, v, g order
+
+
+# ---------------------------------------------------------------------------
+# WKV core
+# ---------------------------------------------------------------------------
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = 16):
+    """Chunked WKV6.
+
+    r,k,v: (B,T,H,N) fp32; logw: (B,T,H,N) per-channel log-decay (<0);
+    u: (H,N); state: (B,H,N,N) [key x value]. Returns (y (B,T,H,N), state').
+    """
+    B, T, H, N = r.shape
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = r.shape[1] // C
+    resh = lambda a: a.reshape(B, nc, C, H, N).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(logw)
+
+    tri = jnp.tril(jnp.ones((C, C), jnp.float32), k=-1)     # strict lower
+
+    def step(S, xs):
+        rr, kk, vv, ww = xs                                  # (B,C,H,N)
+        einc = jnp.cumsum(ww, axis=1)                        # inclusive
+        eexc = einc - ww                                     # exclusive
+        r_t = rr * jnp.exp(eexc)
+        k_t = kk * jnp.exp(-einc)
+        A = jnp.einsum("bthn,bshn->bhts", r_t, k_t) * tri[None, None]
+        y = jnp.einsum("bhts,bshn->bthn", A, vv)
+        # diagonal bonus
+        bonus = jnp.einsum("bthn,bthn->bth", rr * u[None, None], kk)
+        y = y + bonus[..., None] * vv
+        # cross-chunk
+        y = y + jnp.einsum("bthk,bhkn->bthn", r_t, S)
+        # state update
+        k_dec = kk * jnp.exp(einc[:, -1:, :, :] - einc)
+        S = jnp.exp(einc[:, -1])[..., None] * S + \
+            jnp.einsum("bthk,bthn->bhkn", k_dec, vv)
+        return S, y
+
+    with jax.named_scope("wkv_core"):
+        state, ys = jax.lax.scan(step, state, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * C, H, N)
+    return y[:, :T], state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Exact single-token recurrence. r,k,v,logw: (B,H,N); state: (B,H,N,N)."""
+    a = jnp.einsum("bhk,bhn->bhkn", k, v)
+    y = jnp.einsum("bhk,bhkn->bhn", r, state + u[None, :, :, None] * a)
+    state = jnp.exp(logw)[..., None] * state + a
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _group_norm(y, scale, bias, H, eps=64e-5):
+    """Per-head layernorm over N (RWKV's ln_x)."""
+    B, T = y.shape[:2]
+    yh = y.reshape(B, T, H, -1).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = ((yh - mu) ** 2).mean(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    y = yh.reshape(B, T, -1)
+    return y * (1.0 + scale) + bias
+
+
+def time_mix(x, p, head_size, x_prev, state, chunk: int = 16):
+    """RWKV6 attention analogue. x: (B,T,D). Returns (y, (x_last, state'))."""
+    B, T, D = x.shape
+    H = D // head_size
+    xx = _shift(x, x_prev)
+    x_r, x_w, x_k, x_v, x_g = ddlerp(x, xx, p)
+    r = (x_r @ p["w_r"]).astype(jnp.float32).reshape(B, T, H, head_size)
+    k = (x_k @ p["w_k"]).astype(jnp.float32).reshape(B, T, H, head_size)
+    v = (x_v @ p["w_v"]).astype(jnp.float32).reshape(B, T, H, head_size)
+    g = jax.nn.silu((x_g @ p["w_g"]).astype(jnp.float32))
+    r = annotate(r, "batch", None, "rnn", None)
+    k = annotate(k, "batch", None, "rnn", None)
+    logw = -jnp.exp(p["w0"] + jnp.tanh(x_w.astype(jnp.float32) @ p["wA"]) @ p["wB"])
+    logw = jnp.clip(logw, -20.0, -1e-4).reshape(B, T, H, head_size)
+    u = p["u"].reshape(H, head_size)
+    y, state = wkv_chunked(r, k, v, logw, u, state, chunk)
+    y = _group_norm(y.reshape(B, T, D), p["ln_x_scale"], p["ln_x_bias"], H)
+    y = (y * g).astype(x.dtype) @ p["w_o"]
+    return y, (x[:, -1, :], state)
+
+
+def time_mix_step(x, p, head_size, x_prev, state):
+    """Decode: x (B, D). Returns (y (B,D), (x, state'))."""
+    B, D = x.shape
+    H = D // head_size
+    y, (xl, state) = _time_mix_one(x, p, head_size, x_prev, state)
+    return y, (xl, state)
+
+
+def _time_mix_one(x, p, head_size, x_prev, state):
+    B, D = x.shape
+    H = D // head_size
+    x3 = x[:, None, :]
+    xx3 = x_prev[:, None, :]
+    x_r, x_w, x_k, x_v, x_g = ddlerp(x3, xx3, p)
+    sq = lambda a: a[:, 0, :]
+    r = (sq(x_r) @ p["w_r"]).astype(jnp.float32).reshape(B, H, head_size)
+    k = (sq(x_k) @ p["w_k"]).astype(jnp.float32).reshape(B, H, head_size)
+    v = (sq(x_v) @ p["w_v"]).astype(jnp.float32).reshape(B, H, head_size)
+    g = jax.nn.silu((sq(x_g) @ p["w_g"]).astype(jnp.float32))
+    logw = -jnp.exp(p["w0"] + jnp.tanh(sq(x_w).astype(jnp.float32) @ p["wA"]) @ p["wB"])
+    logw = jnp.clip(logw, -20.0, -1e-4).reshape(B, H, head_size)
+    u = p["u"].reshape(H, head_size)
+    y, state = wkv_step(r, k, v, logw, u, state)
+    y = _group_norm(y.reshape(B, 1, D), p["ln_x_scale"], p["ln_x_bias"], H)[:, 0]
+    y = (y * g).astype(x.dtype) @ p["w_o"]
+    return y, (x, state)
+
+
+def channel_mix(x, p, x_prev):
+    """RWKV6 FFN. x: (B,T,D). Returns (y, x_last)."""
+    xx = _shift(x, x_prev)
+    x32, xx32 = x.astype(jnp.float32), xx.astype(jnp.float32)
+    xk = (x32 + (xx32 - x32) * p["mu_k"]).astype(x.dtype)
+    xr = (x32 + (xx32 - x32) * p["mu_r"]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["w_in"]))
+    v = kk @ p["w_out"]
+    rr = jax.nn.sigmoid(xr @ p["w_r"])
+    return rr * v, x[:, -1, :]
+
+
+def channel_mix_step(x, p, x_prev):
+    y, xl = channel_mix(x[:, None, :], p, x_prev)
+    return y[:, 0], xl

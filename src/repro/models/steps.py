@@ -1,0 +1,172 @@
+"""Jittable step functions: train_step / prefill_step / decode_step.
+
+These are the programs the multi-pod dry-run lowers and the trainer runs.
+Train inputs arrive pre-split into microbatches — shape (n_mb, mb, S) with
+the *second* dim data-sharded — so gradient accumulation via ``lax.scan``
+needs no resharding collective.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import annotate
+from repro.models import encdec, lm
+
+Z_LOSS = 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def fused_xent(logits, labels):
+    """Cross entropy without materialising one-hots or gathering sharded
+    vocab: iota-compare-select fuses into the reduction under XLA."""
+    with jax.named_scope("loss_xent"):
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, len(logits.shape) - 1)
+        gold = jnp.sum(jnp.where(ids == labels[..., None], logits, 0.0), axis=-1)
+        nll = lse - gold
+        z = jnp.mean(jnp.square(lse))
+    return jnp.mean(nll), z
+
+
+def compute_loss(params, cfg: ModelConfig, batch, q_chunk: int = 512):
+    if cfg.enc_dec:
+        tok = lm.embed_tokens(params, cfg, batch["tokens"])
+        hidden, aux = encdec.forward(params, cfg, batch["enc_embeds"], tok)
+    else:
+        if cfg.frontend:
+            x = batch["embeds"]
+        else:
+            x = lm.embed_tokens(params, cfg, batch["tokens"])
+        hidden, aux = lm.forward(params, cfg, x, q_chunk)
+    logits = lm.logits_fn(params, cfg, hidden)
+    nll, z = fused_xent(logits, batch["labels"])
+    loss = nll + Z_LOSS * z + aux
+    return loss, {"nll": nll, "z": z, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, optimizer, q_chunk: int = 512,
+                    grad_dtype=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state: {"params", "opt"}; batch leaves: (n_mb, mb, ...) microbatched.
+    """
+    grad_dtype = grad_dtype or jnp.dtype(cfg.grad_accum_dtype)
+
+    def train_step(state, batch):
+        params = state["params"]
+        n_mb = jax.tree.leaves(batch)[0].shape[0]
+
+        def mb_body(acc, mb):
+            gacc, lacc = acc
+            (loss, _), grads = jax.value_and_grad(compute_loss, has_aux=True)(
+                params, cfg, mb, q_chunk)
+            gacc = jax.tree.map(lambda a, g: a + g.astype(grad_dtype), gacc, grads)
+            return (gacc, lacc + loss), None
+
+        gz = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
+        (grads, loss_sum), _ = jax.lax.scan(mb_body, (gz, jnp.zeros((), jnp.float32)),
+                                            batch)
+        grads = jax.tree.map(lambda g: g / n_mb, grads)
+        new_params, new_opt = optimizer.update(grads, state["opt"], params)
+        metrics = {"loss": loss_sum / n_mb,
+                   "grad_norm": jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                             for g in jax.tree.leaves(grads)))}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, q_chunk: int = 512, extra_len: int = 0):
+    def prefill_step(params, batch):
+        if cfg.enc_dec:
+            enc_out = encdec.encode(params, cfg, batch["enc_embeds"])
+            ck, cv = encdec.build_cross_cache(params, cfg, enc_out)
+            tok = lm.embed_tokens(params, cfg, batch["tokens"])
+            hidden = encdec.decode_train(params, cfg, tok, enc_out)
+            cache = {"cross_k": ck, "cross_v": cv}
+        else:
+            if cfg.frontend:
+                x = batch["embeds"]
+            else:
+                x = lm.embed_tokens(params, cfg, batch["tokens"])
+            hidden, cache = lm.prefill(params, cfg, x, extra_len, q_chunk)
+        logits = lm.logits_fn(params, cfg, hidden[:, -1:, :])
+        return logits[:, 0, :], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """decode_step(params, cache, tokens (B,1), pos ()) -> (logits, cache)."""
+
+    def decode_step(params, cache, tokens, pos):
+        x = lm.embed_tokens(params, cfg, tokens)
+        if cfg.enc_dec:
+            hidden, cache = encdec.decode_one(params, cfg, x, cache, pos)
+        else:
+            hidden, cache = lm.decode_one(params, cfg, x, cache, pos)
+        logits = lm.logits_fn(params, cfg, hidden)
+        return logits[:, 0, :], cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Input construction (shapes + dtypes for each (arch, shape) cell)
+# ---------------------------------------------------------------------------
+
+def input_shapes(cfg: ModelConfig, shape: ShapeSpec, n_mb: int | None = None):
+    """Abstract input signature for one cell; values are (shape, dtype).
+
+    train: microbatched token/label batches (+ stub embeddings for vlm/audio);
+    prefill: prompt batch; decode: one token + cache + pos.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        n_mb = n_mb or cfg.train_microbatches
+        mb = B // n_mb
+        out = {"labels": ((n_mb, mb, S), jnp.int32)}
+        if cfg.enc_dec:
+            out["enc_embeds"] = ((n_mb, mb, S, cfg.d_model), dt)
+            out["tokens"] = ((n_mb, mb, S), jnp.int32)
+        elif cfg.frontend:
+            out["embeds"] = ((n_mb, mb, S, cfg.d_model), dt)
+        else:
+            out["tokens"] = ((n_mb, mb, S), jnp.int32)
+        return out
+    if shape.kind == "prefill":
+        out = {}
+        if cfg.enc_dec:
+            out["enc_embeds"] = ((B, S, cfg.d_model), dt)
+            out["tokens"] = ((B, S), jnp.int32)
+        elif cfg.frontend:
+            out["embeds"] = ((B, S, cfg.d_model), dt)
+        else:
+            out["tokens"] = ((B, S), jnp.int32)
+        return out
+    # decode: cache shapes come from lm/encdec.init_cache via eval_shape
+    return {"tokens": ((B, 1), jnp.int32)}
+
+
+def eval_cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.enc_dec:
+        return jax.eval_shape(lambda: encdec.init_cache(cfg, batch, max_len, max_len))
+    return jax.eval_shape(lambda: lm.init_cache(cfg, batch, max_len))

@@ -1,0 +1,170 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+AdamW (fp32 or bf16 moments) and Adafactor (factored second moment — the
+memory-fit choice for the 1T-param arch, see DESIGN.md §7).  Optimizer state
+mirrors the parameter tree ({"m": tree, "v": tree, ...}) so sharding specs
+transfer leaf-for-leaf; a ``memory_kind`` hook supports the Helios
+host-offloaded-optimizer tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params) -> (params', state')
+    name: str = "opt"
+
+
+def constant_lr(v: float):
+    return lambda step: jnp.asarray(v, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        wu = peak * (step + 1.0) / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, wu, cos)
+    return lr
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          moment_dtype=jnp.float32, max_grad_norm=1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params):
+      with jax.named_scope("optimizer_update"):
+        step = state["step"] + 1
+        if max_grad_norm:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+            u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_t * u).astype(p.dtype),
+                    m32.astype(moment_dtype), v32.astype(moment_dtype))
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"step": step, "m": new_m, "v": new_v}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0, max_grad_norm=1.0,
+              scan_stacked: bool = True) -> Optimizer:
+    """Factored second-moment (no first moment): O(n+m) state per (n,m) param.
+
+    ``scan_stacked``: layer-stacked leaves (leading dim > 8, rank >= 3) are
+    updated via ``lax.scan`` over the stack — XLA otherwise materialises ~4
+    full fp32 copies of multi-GB leaves (observed +45 GB/chip on the 1T MoE,
+    EXPERIMENTS.md §Perf kimi iteration 5).
+    """
+    lr_fn = lr if callable(lr) else constant_lr(lr)
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def vstate(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(vstate, params,
+                                  is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params):
+      with jax.named_scope("optimizer_update"):
+        step = state["step"] + 1
+        if max_grad_norm:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        lr_t = lr_fn(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(p, g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p.shape):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(-2)
+                denom = jnp.sqrt(vr[..., None] * vc[..., None, :]
+                                 / jnp.maximum(vr.mean(-1, keepdims=True)[..., None], eps))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                v2 = beta * v["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(v2)
+                nv = {"v": v2}
+            u = g32 / jnp.maximum(denom, eps)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), nv
+
+        def upd_maybe_scanned(p, g, v):
+            if scan_stacked and p.ndim >= 3 and p.shape[0] > 8 and \
+                    set(v) == {"vr", "vc"}:
+                def body(_, xs):
+                    ps, gs, vrs, vcs = xs
+                    np_, nv = upd(ps, gs, {"vr": vrs, "vc": vcs})
+                    return None, (np_, nv["vr"], nv["vc"])
+                _, (np_, vr, vc) = jax.lax.scan(
+                    body, None, (p, g, v["vr"], v["vc"]))
+                return np_, {"vr": vr, "vc": vc}
+            return upd(p, g, v)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd_maybe_scanned(p, g, v)
+                for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_v = tdef.unflatten([o[1] for o in outs])
+        return new_p, {"step": step, "v": new_v}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adamw_bf16":
+        return adamw(moment_dtype=jnp.bfloat16, **kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)

@@ -1,0 +1,69 @@
+"""Config registry + shape applicability (deliverable f)."""
+import pytest
+
+from repro.configs import SHAPES, get_config, list_configs
+
+ASSIGNED = [
+    "phi-3-vision-4.2b", "llama3.2-3b", "stablelm-3b", "qwen3-32b",
+    "qwen2.5-3b", "whisper-small", "kimi-k2-1t-a32b", "qwen2-moe-a2.7b",
+    "rwkv6-7b", "recurrentgemma-2b",
+]
+
+EXACT = {  # assignment table: L, d_model, H, kv, d_ff, vocab
+    "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+    "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+    "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+    "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+    "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+    "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+    "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+    "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+}
+
+
+def test_all_assigned_registered():
+    assert set(ASSIGNED) <= set(list_configs())
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_exact_dims(name):
+    cfg = get_config(name)
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab) == EXACT[name]
+
+
+def test_moe_configs():
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.moe.n_experts == 384 and kimi.moe.top_k == 8
+    q = get_config("qwen2-moe-a2.7b")
+    assert q.moe.n_experts == 60 and q.moe.top_k == 4 and q.moe.n_shared == 4
+    assert q.moe.e_pad == 64           # padded for 16-way EP
+
+
+def test_cell_count_is_40():
+    """10 archs x 4 shapes = 40 assigned cells (incl. documented skips)."""
+    cells = [(a, s) for a in ASSIGNED for s in SHAPES]
+    assert len(cells) == 40
+    runnable = [(a, s) for a in ASSIGNED for s, sp in SHAPES.items()
+                if get_config(a).supports(sp)]
+    # long_500k only for ssm + hybrid
+    assert len(runnable) == 40 - 8
+
+
+def test_long_context_applicability():
+    assert get_config("rwkv6-7b").supports(SHAPES["long_500k"])
+    assert get_config("recurrentgemma-2b").supports(SHAPES["long_500k"])
+    assert not get_config("llama3.2-3b").supports(SHAPES["long_500k"])
+    assert not get_config("whisper-small").supports(SHAPES["long_500k"])
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_reduced_same_family(name):
+    cfg = get_config(name)
+    r = cfg.reduced()
+    assert r.family == cfg.family
+    assert (r.moe is None) == (cfg.moe is None)
+    assert r.block == cfg.block and r.pattern == cfg.pattern
+    assert r.enc_dec == cfg.enc_dec and r.frontend == cfg.frontend

@@ -1,0 +1,55 @@
+"""Dry-run machinery on an 8-device CPU mesh (subprocess: device-count flag
+must precede jax init).  Covers: sharded lowering, compile, roofline-term
+extraction — the same code path as the 256/512-chip production dry-run."""
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import dataclasses
+import jax
+import jax.numpy as jnp
+from repro.configs import get_config, SHAPES, ShapeSpec
+from repro.distributed.sharding import use_mesh
+from repro.launch.dryrun import build_cell
+from repro.launch import roofline
+
+mesh = jax.make_mesh((2, 4), ("data", "model"), devices=jax.devices())
+out = {}
+for name, shape_name in [("llama3.2-3b", "train_4k"), ("rwkv6-7b", "decode_32k"),
+                         ("qwen2-moe-a2.7b", "train_4k")]:
+    cfg = get_config(name).reduced()
+    cfg = dataclasses.replace(cfg, train_microbatches=2)
+    sp = SHAPES[shape_name]
+    shape = ShapeSpec(sp.name, 32, 8, sp.kind)   # tiny dims, same machinery
+    with use_mesh(mesh) as ctx:
+        fn, args, donate = build_cell(cfg, shape, ctx)
+        compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+    rf = roofline.analyze(f"{name}/{shape_name}", compiled, 8,
+                          model_flops=roofline.model_flops_for(cfg, shape))
+    out[f"{name}/{shape_name}"] = {
+        "flops": rf.flops_global, "bytes": rf.bytes_global,
+        "coll": rf.collective_bytes_global, "bottleneck": rf.bottleneck}
+print(json.dumps(out))
+"""
+
+
+def test_dryrun_small_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert len(out) == 3
+    for cell, row in out.items():
+        assert row["flops"] > 0, cell
+        assert row["bytes"] > 0, cell
+        assert row["bottleneck"] in ("compute", "memory", "collective")
+    # the train cells must have gradient collectives
+    assert out["llama3.2-3b/train_4k"]["coll"] > 0

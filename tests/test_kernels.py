@@ -1,0 +1,96 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.gather.ops import cache_gather
+from repro.kernels.rwkv_scan.ops import wkv
+from repro.kernels.segment_agg.ops import segment_mean, segment_sum
+
+
+@pytest.mark.parametrize("n,d,b", [(32, 64, 8), (128, 128, 64), (64, 256, 1),
+                                   (257, 128, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_sweep(n, d, b, dtype):
+    key = jax.random.key(n + d)
+    table = jax.random.normal(key, (n, d), jnp.float32).astype(dtype)
+    idx = jax.random.randint(jax.random.key(b), (b,), 0, n)
+    got = cache_gather(table, idx, use_pallas=True, interpret=True)
+    ref = cache_gather(table, idx, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32))
+
+
+@pytest.mark.parametrize("e,d,s", [(100, 32, 8), (256, 64, 16), (513, 128, 32),
+                                   (64, 16, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_sum_sweep(e, d, s, dtype):
+    key = jax.random.key(e)
+    msgs = jax.random.normal(key, (e, d), jnp.float32).astype(dtype)
+    segs = jnp.sort(jax.random.randint(jax.random.key(d), (e,), 0, s))
+    got = segment_sum(msgs, segs, s, use_pallas=True, interpret=True)
+    ref = segment_sum(msgs, segs, s, use_pallas=False)
+    tol = 1e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_segment_mean():
+    msgs = jnp.ones((64, 8))
+    segs = jnp.repeat(jnp.arange(8), 8)
+    got = segment_mean(msgs, segs, 8, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.ones((8, 8)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("s,h,k,hd", [(128, 4, 4, 32), (256, 4, 2, 64),
+                                      (256, 8, 1, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, h, k, hd, causal, dtype):
+    keys = jax.random.split(jax.random.key(s + h), 3)
+    q = jax.random.normal(keys[0], (2, s, h, hd), jnp.float32).astype(dtype)
+    kk = jax.random.normal(keys[1], (2, s, k, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(keys[2], (2, s, k, hd), jnp.float32).astype(dtype)
+    got = mha(q, kk, v, causal=causal, use_pallas=True, interpret=True)
+    ref = mha(q, kk, v, causal=causal, use_pallas=False)
+    tol = 2e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("t,n,chunk", [(32, 16, 16), (48, 32, 16), (64, 64, 32),
+                                       (40, 16, 16)])
+def test_wkv_sweep(t, n, chunk):
+    keys = jax.random.split(jax.random.key(t + n), 4)
+    BH = 3
+    r = jax.random.normal(keys[0], (BH, t, n))
+    k = jax.random.normal(keys[1], (BH, t, n))
+    v = jax.random.normal(keys[2], (BH, t, n))
+    logw = -jnp.exp(jax.random.normal(keys[3], (BH, t, n)) * 0.5)
+    u = jax.random.normal(keys[0], (BH, n)) * 0.3
+    got = wkv(r, k, v, logw, u, use_pallas=True, interpret=True, chunk=chunk)
+    ref = wkv(r, k, v, logw, u, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv_kernel_matches_model_path():
+    """The kernel must agree with the model's chunked formulation too."""
+    from repro.models.rwkv6 import wkv_chunked
+    keys = jax.random.split(jax.random.key(9), 4)
+    B, T, H, N = 2, 32, 2, 16
+    r = jax.random.normal(keys[0], (B, T, H, N))
+    k = jax.random.normal(keys[1], (B, T, H, N))
+    v = jax.random.normal(keys[2], (B, T, H, N))
+    logw = -jnp.exp(jax.random.normal(keys[3], (B, T, H, N)) * 0.5)
+    u = jax.random.normal(keys[0], (H, N)) * 0.3
+    s0 = jnp.zeros((B, H, N, N))
+    y_model, _ = wkv_chunked(r, k, v, logw, u, s0, chunk=16)
+    resh = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, N)
+    y_kernel = wkv(resh(r), resh(k), resh(v), resh(logw),
+                   jnp.tile(u, (B, 1)), use_pallas=True, interpret=True)
+    y_kernel = y_kernel.reshape(B, H, T, N).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_kernel),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,113 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.hotness import placement
+from repro.launch.hlo_cost import _parse_op_line, _shape_bytes, _parse_shapes
+from repro.models.moe import MoEConfig, router_weights
+from repro.models.steps import fused_xent
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(hot=hnp.arrays(np.int64, st.integers(4, 60),
+                      elements=st.integers(0, 1000)),
+       frac=st.tuples(st.floats(0, 0.5), st.floats(0, 0.5)))
+@settings(**SET)
+def test_placement_partition(hot, frac):
+    n = len(hot)
+    d, h = int(n * frac[0]), int(n * frac[1])
+    loc, slot = placement(hot, d, h)
+    # partition sizes exact
+    assert (loc == 0).sum() == d and (loc == 1).sum() == h
+    # every device row is at least as hot as every storage row
+    if d and (loc == 2).any():
+        assert hot[loc == 0].min() >= hot[loc == 2].max() - 0  # ties allowed
+    # slots within tiers are unique
+    for tier in (0, 1):
+        s = slot[loc == tier]
+        assert len(np.unique(s)) == len(s)
+
+
+@given(logits=hnp.arrays(np.float32, st.tuples(st.integers(1, 4),
+                                               st.integers(2, 30)),
+                         elements=st.floats(-5, 5, width=32)))
+@settings(**SET)
+def test_fused_xent_matches_naive(logits):
+    labels = np.arange(logits.shape[0]) % logits.shape[1]
+    nll, _ = fused_xent(jnp.asarray(logits)[None], jnp.asarray(labels)[None])
+    # naive
+    lse = jax.nn.logsumexp(jnp.asarray(logits), axis=-1)
+    gold = jnp.take_along_axis(jnp.asarray(logits),
+                               jnp.asarray(labels)[:, None], axis=1)[:, 0]
+    naive = jnp.mean(lse - gold)
+    assert abs(float(nll) - float(naive)) < 1e-4
+
+
+@given(bs=st.integers(1, 3), sl=st.integers(1, 8), e=st.integers(4, 16),
+       k=st.integers(1, 4), seed=st.integers(0, 99))
+@settings(**SET)
+def test_router_weights_invariants(bs, sl, e, k, seed):
+    k = min(k, e)
+    logits = jax.random.normal(jax.random.key(seed), (bs, sl, e))
+    mcfg = MoEConfig(n_experts=e, top_k=k, d_expert=8)
+    topw, topi, aux, z = router_weights(logits, mcfg, e)
+    assert topw.shape == (bs, sl, k)
+    # normalized non-negative weights
+    assert float(jnp.min(topw)) >= 0
+    np.testing.assert_allclose(np.asarray(topw.sum(-1)), 1.0, rtol=1e-5)
+    # indices valid + unique per token
+    assert int(topi.max()) < e
+    for b in range(bs):
+        for s in range(sl):
+            ids = np.asarray(topi[b, s])
+            assert len(np.unique(ids)) == k
+    assert float(aux) >= 0.999  # balance loss lower bound is 1 at uniform
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 4))
+@settings(**SET)
+def test_hlo_shape_bytes(a, b, c):
+    assert _shape_bytes(_parse_shapes(f"bf16[{a},{b},{c}]")) == 2 * a * b * c
+    assert _shape_bytes(_parse_shapes(f"f32[{a},{b}]")) == 4 * a * b
+    assert _shape_bytes(_parse_shapes("pred[]")) == 1
+
+
+def test_hlo_op_line_tuple_type():
+    line = ('  %while.1 = (s32[], bf16[2,3]{1,0}, /*index=2*/f32[4]) '
+            'while(%tuple.1), condition=%c, body=%b, '
+            'backend_config={"known_trip_count":{"n":"28"}}')
+    name, type_str, kind, rest = _parse_op_line(line)
+    assert name == "%while.1" and kind == "while"
+    assert _shape_bytes(_parse_shapes(type_str)) == 4 + 12 + 16
+
+
+@given(hnp.arrays(np.float32, st.integers(2, 200),
+                  elements=st.floats(-1, 1, width=32)))
+@settings(**SET)
+def test_compression_bounded_error(g):
+    from repro.distributed.compression import compress_decompress
+    out = compress_decompress(jnp.asarray(g))
+    blocks = np.abs(g).max() if len(g) else 0.0
+    assert float(jnp.max(jnp.abs(out - jnp.asarray(g)))) <= blocks / 127 + 1e-7
+
+
+@given(st.integers(2, 5), st.integers(5, 30), st.integers(0, 1000))
+@settings(**SET)
+def test_attention_causality(heads, seq, seed):
+    """Changing a future token never affects past outputs."""
+    from repro.models.attention import attend
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(k1, (1, seq, heads, 8))
+    k = jax.random.normal(k2, (1, seq, 1, 8))
+    v = jax.random.normal(k3, (1, seq, 1, 8))
+    o1 = attend(q, k, v, causal=True, q_chunk=8)
+    k2_ = k.at[:, -1].set(9.0)
+    v2_ = v.at[:, -1].set(-9.0)
+    o2 = attend(q, k2_, v2_, causal=True, q_chunk=8)
+    np.testing.assert_allclose(np.asarray(o1[:, :-1]), np.asarray(o2[:, :-1]),
+                               atol=1e-5)

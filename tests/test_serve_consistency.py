@@ -1,0 +1,111 @@
+"""Decode-vs-teacher-forced-forward agreement per block family.
+
+The strongest correctness check in the suite: token-by-token decode through
+the KV-cache/recurrent-state path must reproduce the training forward's
+logits (fp32, no remat, no-drop MoE capacity)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import encdec, lm
+
+B, S = 2, 20
+
+
+def _fp32(cfg):
+    cfg = dataclasses.replace(cfg.reduced(), dtype="float32", remat=False)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0,
+                                         group_size=1))
+    return cfg
+
+
+@pytest.mark.parametrize("name", ["llama3.2-3b", "qwen3-32b", "qwen2.5-3b",
+                                  "rwkv6-7b", "recurrentgemma-2b",
+                                  "kimi-k2-1t-a32b"])
+def test_decode_matches_forward(name):
+    cfg = _fp32(get_config(name))
+    key = jax.random.key(1)
+    params = lm.init_params(key, cfg)
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab)
+    x = lm.embed_tokens(params, cfg, toks)
+    hid, _ = lm.forward(params, cfg, x, q_chunk=8)
+    full = lm.logits_fn(params, cfg, hid)
+
+    cache = lm.init_cache(cfg, B, S)
+    outs = []
+    for t in range(S):
+        xt = lm.embed_tokens(params, cfg, toks[:, t:t + 1])
+        hidden, cache = lm.decode_one(params, cfg, xt, cache, jnp.int32(t))
+        outs.append(lm.logits_fn(params, cfg, hidden)[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    assert float(jnp.max(jnp.abs(dec - full))) < 2e-3
+
+
+@pytest.mark.parametrize("name", ["llama3.2-3b", "rwkv6-7b",
+                                  "recurrentgemma-2b"])
+def test_prefill_matches_forward(name):
+    cfg = _fp32(get_config(name))
+    params = lm.init_params(jax.random.key(1), cfg)
+    toks = jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab)
+    x = lm.embed_tokens(params, cfg, toks)
+    hid, _ = lm.forward(params, cfg, x, q_chunk=8)
+    hid_p, _ = lm.prefill(params, cfg, x, q_chunk=8)
+    assert float(jnp.max(jnp.abs(hid - hid_p))) < 1e-4
+
+
+def test_prefill_then_decode_continuation():
+    cfg = _fp32(get_config("llama3.2-3b"))
+    params = lm.init_params(jax.random.key(1), cfg)
+    toks = jax.random.randint(jax.random.key(4), (B, S), 0, cfg.vocab)
+    x = lm.embed_tokens(params, cfg, toks)
+    hid, _ = lm.forward(params, cfg, x, q_chunk=8)
+    full_last = lm.logits_fn(params, cfg, hid)[:, -1]
+    # prefill S-1 tokens, decode token S-1
+    _, cache = lm.prefill(params, cfg, x[:, :S - 1], extra_len=1, q_chunk=8)
+    xt = lm.embed_tokens(params, cfg, toks[:, S - 1:S])
+    hidden, _ = lm.decode_one(params, cfg, xt, cache, jnp.int32(S - 1))
+    got = lm.logits_fn(params, cfg, hidden)[:, 0]
+    assert float(jnp.max(jnp.abs(got - full_last))) < 2e-3
+
+
+def test_whisper_decode_matches_forward():
+    cfg = _fp32(get_config("whisper-small"))
+    params = encdec.init_params(jax.random.key(1), cfg)
+    toks = jax.random.randint(jax.random.key(5), (B, S), 0, cfg.vocab)
+    frames = jax.random.normal(jax.random.key(6), (B, S, cfg.d_model)) * 0.1
+    tok_emb = lm.embed_tokens(params, cfg, toks)
+    hid, _ = encdec.forward(params, cfg, frames, tok_emb)
+    full = lm.logits_fn(params, cfg, hid)
+    enc_out = encdec.encode(params, cfg, frames)
+    ck, cv = encdec.build_cross_cache(params, cfg, enc_out)
+    cache = encdec.init_cache(cfg, B, S, S)
+    cache["cross_k"], cache["cross_v"] = ck, cv
+    outs = []
+    for t in range(S):
+        xt = lm.embed_tokens(params, cfg, toks[:, t:t + 1])
+        hidden, cache = encdec.decode_one(params, cfg, xt, cache, jnp.int32(t))
+        outs.append(lm.logits_fn(params, cfg, hidden)[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    assert float(jnp.max(jnp.abs(dec - full))) < 2e-3
+
+
+def test_windowed_attention_masks_history():
+    """recurrentgemma's local attention must ignore tokens beyond the window."""
+    from repro.models.attention import attend
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (1, 16, 2, 8))
+    k = jax.random.normal(jax.random.key(1), (1, 16, 1, 8))
+    v = jax.random.normal(jax.random.key(2), (1, 16, 1, 8))
+    w = 4
+    o1 = attend(q, k, v, causal=True, window=w, q_chunk=8)
+    # perturb k/v at position 0: outputs at positions >= w must not change
+    k2 = k.at[:, 0].set(100.0)
+    v2 = v.at[:, 0].set(-50.0)
+    o2 = attend(q, k2, v2, causal=True, window=w, q_chunk=8)
+    assert float(jnp.max(jnp.abs(o1[:, w:] - o2[:, w:]))) < 1e-5
+    assert float(jnp.max(jnp.abs(o1[:, 0] - o2[:, 0]))) > 1e-3
