@@ -43,8 +43,8 @@ def _graph(skew=1.2):
 def _run(graph, store, mode, **kw):
     cfg = TrainerConfig(mode=mode, batch_size=512, fanouts=(10, 5), hidden=128,
                         presample_batches=3, **kw)
-    tr = OutOfCoreGNNTrainer(graph, store, cfg)
-    out = tr.train(N_BATCHES)
+    with OutOfCoreGNNTrainer(graph, store, cfg) as tr:
+        out = tr.train(N_BATCHES)
     return out
 
 
@@ -160,6 +160,42 @@ def fig11_pipeline():
              f"speedup_vs_nopipe={sp:.2f}")
 
 
+def serve_slo():
+    """Serving: SLO-aware micro-batching over the cache/IO stack.
+
+    Open-loop Zipf workload (arrival skew matches the synthetic graph's
+    degree skew) through the inference server; reports requests/s and
+    virtual p50/p99 for the Helios async engine vs the sync (GIDS-like)
+    and CPU-managed (Ginex-like) engines, plus Helios with cross-request
+    node dedup disabled.
+    """
+    from repro.serving import GNNInferenceServer, ServerConfig, zipf_workload
+    g = _graph(skew=1.2)
+    store = _store(1024, tag="serve")
+    wl = zipf_workload(g.n_vertices, 64, 32, rate_rps=60000,
+                       degrees=g.degrees(), seed=0)
+    base_rps = None
+    for mode, dedup in (("helios", True), ("helios", False),
+                        ("gids", True), ("cpu", True)):
+        cfg = ServerConfig(mode=mode, dedup=dedup, request_batch_size=32,
+                           fanouts=(8, 4), hidden=128,
+                           device_cache_frac=0.01, host_cache_frac=0.04,
+                           presample_batches=2, max_batch_requests=8, seed=0)
+        with GNNInferenceServer(g, store, cfg) as srv:
+            for seeds, arrival, klass in wl:
+                srv.submit(seeds, klass, arrival)
+            st = srv.flush()
+            rps = st.throughput_rps()
+            if base_rps is None:
+                base_rps = rps
+            label = mode if dedup else f"{mode}-nodedup"
+            emit(f"serve/{label}", st.percentile(50) * 1e6,
+                 f"rps={rps:.0f};p99_us={st.percentile(99) * 1e6:.0f};"
+                 f"served={st.served};rejected={st.rejected_total};"
+                 f"dedup_storage_savings={st.dedup_storage_savings:.2f};"
+                 f"rps_vs_helios={rps / base_rps:.3f}")
+
+
 def table1_datasets():
     """Table 1 sanity: registered dataset characteristics."""
     for name, d in DATASETS.items():
@@ -170,4 +206,4 @@ def table1_datasets():
 
 ALL = [table1_datasets, fig7_iostack, fig5_end_to_end, fig6_inmem,
        fig8_cpu_cache_ssds, fig9_cpu_cache_dims, fig10_gpu_cache,
-       fig11_pipeline]
+       fig11_pipeline, serve_slo]

@@ -12,9 +12,18 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="comma-separated figure-name prefixes, e.g. "
+                         "fig7,serve")
+    ap.add_argument("--list", action="store_true",
+                    help="list available figures and exit")
     args = ap.parse_args()
     from benchmarks import figs
+    if args.list:
+        for fn in figs.ALL:
+            doc = (fn.__doc__ or "").strip().splitlines()[0]
+            print(f"{fn.__name__}: {doc}")
+        return
     sel = [s.strip() for s in args.only.split(",") if s.strip()]
     print("name,us_per_call,derived")
     t0 = time.time()

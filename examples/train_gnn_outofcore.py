@@ -33,9 +33,9 @@ def main():
         cfg = TrainerConfig(model=args.model, mode=mode, batch_size=512,
                             fanouts=(10, 5), hidden=256,
                             device_cache_frac=0.05, host_cache_frac=0.10)
-        tr = OutOfCoreGNNTrainer(g, store, cfg)
-        n = args.steps if mode == "helios" else max(20, args.steps // 10)
-        out = tr.train(n)
+        with OutOfCoreGNNTrainer(g, store, cfg) as tr:
+            n = args.steps if mode == "helios" else max(20, args.steps // 10)
+            out = tr.train(n)
         print(f"[{mode:14s}] {n:4d} steps | loss {out['loss_first']:.3f} -> "
               f"{out['loss_last']:.3f} | virt/batch "
               f"{out['virtual_per_batch_s']*1e3:.2f} ms | cache hit "

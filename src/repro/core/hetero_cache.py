@@ -48,6 +48,22 @@ class CacheStats:
         return max(ts) if pipelined else sum(ts)
 
 
+def tier_rows(mode: str, n_vertices: int, device_frac: float,
+              host_frac: float) -> tuple:
+    """Per-mode cache tier sizing (shared by trainer and server):
+    GIDS keeps a device-only BaM cache, CPU-managed systems a host-only
+    staging buffer, ``helios-nocache`` ablates both."""
+    dev_rows = int(n_vertices * device_frac)
+    host_rows = int(n_vertices * host_frac)
+    if mode == "helios-nocache":
+        dev_rows = host_rows = 0
+    if mode == "gids":
+        host_rows = 0
+    if mode == "cpu":
+        dev_rows = 0
+    return dev_rows, host_rows
+
+
 class HeteroCache:
     """Hotness-placed 3-tier feature cache."""
 
@@ -57,6 +73,7 @@ class HeteroCache:
                  env: HardwareEnvelope = DEFAULT_ENVELOPE):
         self.store = store
         self.env = env
+        self._owns_engine = io_engine is None
         self.io = io_engine or AsyncIOEngine(store, env=env)
         self.loc, self.slot = hotness_mod.placement(hotness, device_rows, host_rows)
         order = np.argsort(-hotness, kind="stable")
@@ -84,10 +101,19 @@ class HeteroCache:
 
     def gather(self, ids: np.ndarray, pipelined: bool = True) -> np.ndarray:
         """Fetch feature rows for ``ids`` through the hierarchy."""
-        import jax
+        return self.gather_planned(ids, self.plan(ids))
+
+    def gather_planned(self, ids: np.ndarray, plan) -> np.ndarray:
+        """``gather`` with a precomputed tier plan.
+
+        Consumers that plan once and reuse the split (the serving
+        micro-batcher dedups node ids across requests, plans the unique
+        set, then gathers exactly once) call this to avoid a second
+        translation pass.
+        """
         import jax.numpy as jnp
         t0 = time.perf_counter()
-        (dslot, ddest), (hslot, hdest), (sids, sdest) = self.plan(ids)
+        (dslot, ddest), (hslot, hdest), (sids, sdest) = plan
         out = np.empty((len(ids), self.store.row_dim), self.store.dtype)
 
         # 1. storage first: async submit, longest latency (paper ordering)
@@ -125,3 +151,16 @@ class HeteroCache:
         """Pure device-tier lookup for jit'd consumers (hot rows only)."""
         import jax.numpy as jnp
         return jnp.take(self.device_tier, ids_dev, axis=0)
+
+    def close(self):
+        """Shut down the IO engine iff this cache created it; shared
+        engines are closed by their owner (trainer/server)."""
+        if self._owns_engine:
+            self.io.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

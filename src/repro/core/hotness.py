@@ -13,10 +13,17 @@ import numpy as np
 def presample_gnn(sampler, seeds_per_batch: int, n_batches: int,
                   n_rows: int, seed: int = 0) -> np.ndarray:
     """One pre-sampling epoch: counts vertex accesses under the sampler."""
-    rng = np.random.default_rng(seed)
+    # decorrelated stream: with plain default_rng(seed) the draws below are
+    # bit-identical to the trainer's own batch seeds (same seed, same
+    # choice() call), handing placement oracle knowledge of the first
+    # training batches and inflating measured hit rates
+    rng = np.random.default_rng([seed, 0x9E3779B9])
     counts = np.zeros(n_rows, np.int64)
     for _ in range(n_batches):
-        seeds = rng.integers(0, n_rows, seeds_per_batch)
+        # unique seeds, matching the trainer's draw and the sampler's
+        # documented without-replacement contract
+        seeds = rng.choice(n_rows, size=min(seeds_per_batch, n_rows),
+                           replace=False)
         batch = sampler.sample(seeds)
         ids, c = np.unique(batch.all_nodes, return_counts=True)
         np.add.at(counts, ids, c)

@@ -22,7 +22,6 @@ Storage is memory-mapped shards; virtual IO time comes from the calibrated
 """
 from __future__ import annotations
 
-import math
 import os
 import queue
 import threading
@@ -40,7 +39,21 @@ from repro.core.simulator import ArrayModel, DEFAULT_ENVELOPE, HardwareEnvelope
 # ---------------------------------------------------------------------------
 
 class FeatureStore:
-    """Row store striped round-robin over ``n_shards`` memmap files."""
+    """Row store striped round-robin over ``n_shards`` memmap files.
+
+    Row ``i`` lives on shard ``i % n_shards`` at offset ``i // n_shards``,
+    so hot (low-id) rows spread evenly over the array instead of piling up
+    on shard 0 the way contiguous range partitioning would.
+    """
+
+    LAYOUT = "round-robin.v1"
+
+    def _layout_tag(self) -> str:
+        """Full geometry, not just the scheme: reopening with a different
+        shard count/row count would silently permute rows otherwise."""
+        return (f"{self.LAYOUT}/nshards={self.n_shards}"
+                f"/nrows={self.n_rows}/rowdim={self.row_dim}"
+                f"/dtype={self.dtype.name}")
 
     def __init__(self, path: str, n_rows: int, row_dim: int,
                  dtype=np.float32, n_shards: int = 12, create: bool = False,
@@ -49,13 +62,22 @@ class FeatureStore:
         self.dtype = np.dtype(dtype)
         self.row_bytes = self.row_dim * self.dtype.itemsize
         os.makedirs(path, exist_ok=True)
+        # layout marker: stores written under the old contiguous range
+        # partitioning would otherwise reopen and silently permute rows
+        marker = os.path.join(path, "LAYOUT")
+        fresh = create or not os.path.exists(os.path.join(path, "shard_0.bin"))
+        if not fresh:
+            tag = (open(marker).read().strip()
+                   if os.path.exists(marker) else "<missing>")
+            if tag != self._layout_tag():
+                raise ValueError(
+                    f"feature store at {path} has layout {tag!r}, expected "
+                    f"{self._layout_tag()!r}; recreate it with create=True")
         self.shards = []
-        rows_per = math.ceil(n_rows / n_shards)
         for s in range(n_shards):
-            lo = s * rows_per
-            hi = min(n_rows, lo + rows_per)
+            n_local = len(range(s, n_rows, n_shards))
             f = os.path.join(path, f"shard_{s}.bin")
-            shape = (max(hi - lo, 0), row_dim)
+            shape = (n_local, row_dim)
             if create or not os.path.exists(f):
                 mm = np.lib.format.open_memmap(f, mode="w+", dtype=self.dtype,
                                                shape=shape)
@@ -67,10 +89,12 @@ class FeatureStore:
                         mm[i:j] = rng.standard_normal((j - i, row_dim)).astype(self.dtype)
                 mm.flush()
             self.shards.append(np.lib.format.open_memmap(f, mode="r"))
-        self.rows_per = rows_per
+        if fresh:
+            with open(marker, "w") as fh:
+                fh.write(self._layout_tag() + "\n")
 
     def locate(self, ids: np.ndarray):
-        return ids // self.rows_per, ids % self.rows_per
+        return ids % self.n_shards, ids // self.n_shards
 
     def read_rows(self, ids: np.ndarray) -> np.ndarray:
         """Raw synchronous gather (no timing model)."""
@@ -179,7 +203,31 @@ class AsyncIOEngine:
                 fut.set_exception(e)
 
     def close(self):
+        """Drain, stop, and JOIN the worker threads (idempotent).
+
+        Draining first means every ticket submitted before close() still
+        resolves — workers check ``_stop`` before popping, so stopping with
+        items queued would strand their futures and deadlock any waiter.
+        Callers that share one engine across consumers (e.g. a
+        ``HeteroCache`` inside a server) route shutdown through the owner;
+        see ``HeteroCache.close``.
+        """
+        if self._threads:
+            self.drain()
         self._stop = True
+        for t in self._threads:
+            # unbounded: shutdown legitimately waits out in-flight IO —
+            # workers exit within one queue-poll interval once idle, and a
+            # timed join would let a slow worker outlive close() unnoticed
+            t.join()
+        self._threads = []
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     def drain(self):
         while not self._sq.empty():
@@ -197,6 +245,16 @@ class SyncIOEngine:
         self.env = env
         self.model = ArrayModel(store.n_shards, env)
         self.stats = IOStats()
+
+    def close(self):
+        pass                            # no worker threads to reap
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     def submit(self, ids: np.ndarray, out: np.ndarray | None = None,
                dest: np.ndarray | None = None, tag: str = "") -> IOTicket:
@@ -230,3 +288,15 @@ class CPUManagedEngine(SyncIOEngine):
         extra = len(ids) * self.store.row_bytes / self.env.dram_bw * 4.0
         self.stats.virtual_io_s += extra
         return tk
+
+
+def make_engine(mode: str, store: FeatureStore, worker_budget: float = 0.3,
+                env: HardwareEnvelope = DEFAULT_ENVELOPE):
+    """Engine for an ablation mode (shared by trainer and server):
+    ``cpu`` -> CPUManagedEngine, ``gids`` -> SyncIOEngine, anything
+    Helios-flavoured -> AsyncIOEngine."""
+    if mode == "cpu":
+        return CPUManagedEngine(store, env=env)
+    if mode == "gids":
+        return SyncIOEngine(store, env=env)
+    return AsyncIOEngine(store, worker_budget=worker_budget, env=env)

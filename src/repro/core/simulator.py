@@ -34,6 +34,13 @@ class HardwareEnvelope:
 
 DEFAULT_ENVELOPE = HardwareEnvelope()
 
+# Calibrated operator cost constants shared by the trainer and the
+# inference server (one source: recalibrating here moves both).
+SAMPLE_RATE_DEVICE = 2e9       # bytes/s of edge data, device-managed sampling
+SAMPLE_RATE_CPU = 0.04e9       # CPU-managed sampling+batch build (paper I1)
+MATMUL_RATE = 60e12            # flops/s device matmul throughput
+HOST_STAGE_BW = 2e9            # bytes/s CPU staging-buffer gather
+
 
 @dataclass
 class SSDModel:

@@ -88,6 +88,20 @@ def gnn_loss(params, feats, blocks, labels, batch_size: int, model: str):
     return loss, acc
 
 
+def make_gnn_infer_step(model: str, batch_size: int):
+    """Forward-only jit'd step for serving: params + padded blocks -> logits
+    for the first ``batch_size`` nodes (the seeds).  No optimizer state, no
+    gradients — the server shares one compiled step across all requests
+    because the batcher pads every request to the sampler's static shapes."""
+    @jax.jit
+    def step(params, feats, src, dst, emask):
+        blocks = [(s, d, m) for s, d, m in zip(src, dst, emask)]
+        h = gnn_forward(params, feats, blocks, model)
+        logits = h[:batch_size] @ params["head"]["w"] + params["head"]["b"]
+        return logits.astype(jnp.float32)
+    return step
+
+
 def make_gnn_train_step(model: str, optimizer, batch_size: int):
     @jax.jit
     def step(state, feats, src, dst, emask, labels):

@@ -24,11 +24,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hotness as hotness_mod
-from repro.core.hetero_cache import HeteroCache
-from repro.core.iostack import (AsyncIOEngine, CPUManagedEngine, FeatureStore,
-                                SyncIOEngine)
+from repro.core.hetero_cache import HeteroCache, tier_rows
+from repro.core.iostack import FeatureStore, make_engine
 from repro.core.pipeline import Operator, PipelineExecutor
-from repro.core.simulator import DEFAULT_ENVELOPE, pcie_time
+from repro.core.simulator import (DEFAULT_ENVELOPE, HOST_STAGE_BW,
+                                  MATMUL_RATE, SAMPLE_RATE_CPU,
+                                  SAMPLE_RATE_DEVICE, pcie_time)
 from repro.gnn.graph import CSRGraph
 from repro.gnn.models import init_gnn_params, make_gnn_train_step
 from repro.gnn.sampling import NeighborSampler
@@ -53,31 +54,24 @@ class TrainerConfig:
 
 class OutOfCoreGNNTrainer:
     def __init__(self, graph: CSRGraph, store: FeatureStore,
-                 cfg: TrainerConfig = TrainerConfig()):
+                 cfg: TrainerConfig | None = None):
+        cfg = cfg if cfg is not None else TrainerConfig()
         self.g, self.store, self.cfg = graph, store, cfg
         self.sampler = NeighborSampler(graph, cfg.fanouts, cfg.seed)
 
         # --- IO engine per mode ------------------------------------------
-        if cfg.mode == "cpu":
-            self.io = CPUManagedEngine(store)
-        elif cfg.mode == "gids":
-            self.io = SyncIOEngine(store)
-        else:
-            self.io = AsyncIOEngine(store, worker_budget=cfg.io_worker_budget)
+        self.io = make_engine(cfg.mode, store, cfg.io_worker_budget)
 
         # --- hotness pre-sampling + cache placement (paper §3.2.2) -------
+        # presample on a SEPARATE sampler so the training sampler's rng
+        # stream doesn't depend on the presample configuration
         hot = hotness_mod.presample_gnn(
-            self.sampler, cfg.batch_size, cfg.presample_batches,
+            NeighborSampler(graph, cfg.fanouts, cfg.seed + 1),
+            cfg.batch_size, cfg.presample_batches,
             graph.n_vertices, cfg.seed)
-        n = graph.n_vertices
-        dev_rows = int(n * cfg.device_cache_frac)
-        host_rows = int(n * cfg.host_cache_frac)
-        if cfg.mode in ("helios-nocache",):
-            dev_rows = host_rows = 0
-        if cfg.mode == "gids":                     # device-only BaM cache
-            host_rows = 0
-        if cfg.mode == "cpu":                      # host-only staging buffer
-            dev_rows = 0
+        dev_rows, host_rows = tier_rows(cfg.mode, graph.n_vertices,
+                                        cfg.device_cache_frac,
+                                        cfg.host_cache_frac)
         self.cache = HeteroCache(store, hot, dev_rows, host_rows, self.io)
 
         # --- model + optimizer -------------------------------------------
@@ -153,7 +147,7 @@ class OutOfCoreGNNTrainer:
             # CPU-managed systems sample AND build the feature mini-batch on
             # the CPU (paper I1: 70-98% of epoch time); device-managed
             # sampling is ~50x faster (massively parallel)
-            rate = 0.04e9 if cpu_managed else 2e9
+            rate = SAMPLE_RATE_CPU if cpu_managed else SAMPLE_RATE_DEVICE
             return edges * 16 / rate
 
         def vc_submit(ctx):
@@ -176,14 +170,14 @@ class OutOfCoreGNNTrainer:
             n_real = int(ctx["mb"].node_mask.sum())
             if cpu_managed:
                 nbytes = n_real * rb
-                return nbytes / 2e9 + pcie_time(nbytes)
+                return nbytes / HOST_STAGE_BW + pcie_time(nbytes)
             edges = sum(len(b.src_pos) for b in ctx["mb"].blocks)
             return pcie_time(edges * 8 + n_real * 8)
 
         def vc_train(ctx):
             edges = sum(int(m.sum()) for m in ctx["tensors"][2])
             flops = 4 * edges * self.store.row_dim * self.cfg.hidden
-            return flops / 60e12             # device matmul throughput-ish
+            return flops / MATMUL_RATE
 
         return [
             Operator("sample", op_sample, "host", (), vc_sample),
@@ -225,3 +219,17 @@ class OutOfCoreGNNTrainer:
         out["loss_first"] = self.metrics_log[0]["loss"] if self.metrics_log else None
         out["loss_last"] = self.metrics_log[-1]["loss"] if self.metrics_log else None
         return out
+
+    # -----------------------------------------------------------------
+    def close(self):
+        """Release the IO stack: cache first (closes nothing it doesn't
+        own), then the engine this trainer created (joins its workers)."""
+        self.cache.close()
+        self.io.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,249 @@
+"""GNN inference server over the Helios cache/IO stack.
+
+The server owns one shared ``HeteroCache`` + IO engine and a single jit'd
+forward-only step (``make_gnn_infer_step``).  ``submit`` enqueues a request
+and returns a future; ``flush`` drains the queue through the SLO scheduler
+and micro-batcher.  Each micro-batch performs ONE planned gather over the
+union of node ids across its requests (cross-request dedup), then scatters
+rows back per request for the forward pass.
+
+Virtual-time accounting mirrors the trainer's operator costs on the
+calibrated hardware envelope:
+
+  * helios — async engine; sample/IO/compute pipelined on separate
+    ``VirtualClock`` resources, tier gathers overlap (max, not sum);
+  * gids   — sync coupled engine (collapsed queue depth), serial stages;
+  * cpu    — CPU-managed staging engine, slow host sampling, the whole
+    mini-batch staged through host memory and re-crossed over PCIe.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import hotness as hotness_mod
+from repro.core.hetero_cache import HeteroCache, tier_rows
+from repro.core.iostack import FeatureStore, make_engine
+from repro.core.simulator import (DEFAULT_ENVELOPE, HOST_STAGE_BW,
+                                  MATMUL_RATE, SAMPLE_RATE_CPU,
+                                  SAMPLE_RATE_DEVICE, VirtualClock,
+                                  dram_gather_time, hbm_gather_time,
+                                  pcie_time)
+from repro.gnn.graph import CSRGraph
+from repro.gnn.models import init_gnn_params, make_gnn_infer_step
+from repro.gnn.sampling import NeighborSampler
+from repro.serving.batcher import MicroBatcher
+from repro.serving.scheduler import (INTERACTIVE, PriorityClass, ServeRequest,
+                                     SLOScheduler)
+from repro.serving.stats import ServingStats
+
+
+@dataclass
+class ServerConfig:
+    model: str = "sage"                # sage | gcn
+    hidden: int = 256
+    request_batch_size: int = 64       # seeds per request (padded to this)
+    fanouts: tuple = (10, 5)
+    mode: str = "helios"               # helios | gids | cpu
+    dedup: bool = True                 # cross-request node dedup
+    device_cache_frac: float = 0.05
+    host_cache_frac: float = 0.10
+    io_worker_budget: float = 0.3
+    presample_batches: int = 4
+    batch_window_v: float = 1e-3       # micro-batch time window (virtual s)
+    max_batch_requests: int = 8        # micro-batch size window
+    seed: int = 0
+
+
+class GNNInferenceServer:
+    """SLO-aware micro-batching inference server (request -> future)."""
+
+    def __init__(self, graph: CSRGraph, store: FeatureStore,
+                 cfg: ServerConfig | None = None, params=None):
+        cfg = cfg if cfg is not None else ServerConfig()
+        if cfg.request_batch_size > graph.n_vertices:
+            raise ValueError(f"request_batch_size={cfg.request_batch_size} "
+                             f"exceeds graph size {graph.n_vertices}: "
+                             "requests cannot be padded with unique seeds")
+        self.g, self.store, self.cfg = graph, store, cfg
+        self.sampler = NeighborSampler(graph, cfg.fanouts, cfg.seed)
+
+        # --- IO engine per mode (same ablation axes as the trainer) ------
+        self.io = make_engine(cfg.mode, store, cfg.io_worker_budget)
+
+        # --- hotness placement; presample on a SEPARATE sampler so the
+        # serving sampler's rng stream is untouched (replayable) ----------
+        hot = hotness_mod.presample_gnn(
+            NeighborSampler(graph, cfg.fanouts, cfg.seed + 1),
+            cfg.request_batch_size * cfg.max_batch_requests,
+            cfg.presample_batches, graph.n_vertices, cfg.seed)
+        dev_rows, host_rows = tier_rows(cfg.mode, graph.n_vertices,
+                                        cfg.device_cache_frac,
+                                        cfg.host_cache_frac)
+        self.cache = HeteroCache(store, hot, dev_rows, host_rows, self.io)
+
+        # --- model + single compiled forward step ------------------------
+        if params is None:
+            import jax
+            params = init_gnn_params(jax.random.key(cfg.seed), cfg.model,
+                                     store.row_dim, cfg.hidden,
+                                     graph.n_classes)
+        self.params = params
+        self.infer_step = make_gnn_infer_step(cfg.model,
+                                              cfg.request_batch_size)
+
+        self.batcher = MicroBatcher(self.sampler, cfg.request_batch_size)
+        self.scheduler = SLOScheduler(cfg.batch_window_v,
+                                      cfg.max_batch_requests)
+        self.clock = VirtualClock()
+        self.stats = ServingStats()
+        self.env = DEFAULT_ENVELOPE
+        self._rid = 0
+        self._pipelined = cfg.mode == "helios"
+
+    # ------------------------------------------------------------------
+    def now_v(self) -> float:
+        """Virtual time the server can next start batch work."""
+        res = "host" if self._pipelined else "serial"
+        return self.clock.resources.get(res, 0.0)
+
+    def submit(self, seeds: np.ndarray,
+               klass: PriorityClass = INTERACTIVE,
+               arrival_v: float | None = None) -> Future:
+        """Enqueue one inference request; resolves to ``{"logits",
+        "latency_v", "klass"}`` or ``None`` if shed by admission.
+
+        Invalid requests raise HERE, at the caller's boundary — a bad
+        request must never poison the micro-batch it would have joined.
+        """
+        seeds = np.asarray(seeds, np.int64)
+        if len(seeds) > self.cfg.request_batch_size:
+            raise ValueError(f"request has {len(seeds)} seeds > "
+                             f"request_batch_size="
+                             f"{self.cfg.request_batch_size}")
+        if len(np.unique(seeds)) != len(seeds):
+            raise ValueError("request seeds must be unique "
+                             "(sampler contract)")
+        if len(seeds) == 0 or seeds.min() < 0 or seeds.max() >= self.g.n_vertices:
+            raise ValueError("request seeds must be non-empty vertex ids "
+                             f"in [0, {self.g.n_vertices})")
+        req = ServeRequest(seeds,
+                           self.now_v() if arrival_v is None else arrival_v,
+                           klass, Future(), self._rid)
+        self._rid += 1
+        self.stats.submitted += 1
+        self.scheduler.enqueue(req)
+        return req.future
+
+    def flush(self):
+        """Drain the queue: form, execute, and account micro-batches."""
+        while len(self.scheduler):
+            self._serve_one()
+        return self.stats
+
+    # ------------------------------------------------------------------
+    def _serve_one(self):
+        admitted, start_v, rejected = self.scheduler.next_batch(self.now_v())
+        for r in rejected:
+            self.stats.reject(r.klass.name)
+            r.future.set_result(None)
+        if not admitted:
+            return
+
+        micro = self.batcher.build(admitted)
+        cfg = self.cfg
+        rb = self.store.row_bytes
+        loc = self.cache.loc
+
+        # --- one deduplicated gather (or per-request, for the ablation) --
+        io_v0 = self.io.stats.virtual_io_s
+        naive_storage = sum(int((loc[u] == 2).sum())
+                            for u in micro.unique_per_request)
+        if cfg.dedup:
+            plan = self.cache.plan(micro.unique_ids)
+            rows = self.cache.gather_planned(micro.unique_ids, plan)
+            feats = [rows[sc] for sc in micro.scatter]
+            n_dev = len(plan[0][0])
+            n_host = len(plan[1][0])
+            issued_storage = len(plan[2][0])
+            rows_fetched = len(micro.unique_ids)
+        else:
+            feats, n_dev, n_host, issued_storage = [], 0, 0, 0
+            for mb in micro.minibatches:
+                p = self.cache.plan(mb.nodes)
+                feats.append(self.cache.gather_planned(mb.nodes, p))
+                n_dev += len(p[0][0])
+                n_host += len(p[1][0])
+                issued_storage += len(p[2][0])
+            rows_fetched = micro.rows_requested
+        t_storage = self.io.stats.virtual_io_s - io_v0
+
+        # --- forward pass per request (shared compiled step) -------------
+        import jax.numpy as jnp
+        results = []
+        for mb, f in zip(micro.minibatches, feats):
+            logits = self.infer_step(
+                self.params, jnp.asarray(f),
+                tuple(jnp.asarray(b.src_pos) for b in mb.blocks),
+                tuple(jnp.asarray(b.dst_pos) for b in mb.blocks),
+                tuple(jnp.asarray(b.edge_mask) for b in mb.blocks))
+            results.append(np.asarray(logits))
+
+        # --- virtual-time accounting (trainer-faithful operator costs) ---
+        edges = micro.n_edges
+        cpu_managed = cfg.mode == "cpu"
+        t_sample = edges * 16 / (SAMPLE_RATE_CPU if cpu_managed
+                                 else SAMPLE_RATE_DEVICE)
+        t_host = (dram_gather_time(n_host * rb, self.env)
+                  + pcie_time(n_host * rb, self.env))
+        t_dev = hbm_gather_time(n_dev * rb, self.env)
+        if cpu_managed:     # whole batch staged on host, re-crossed PCIe
+            t_h2d = (rows_fetched * rb / HOST_STAGE_BW
+                     + pcie_time(rows_fetched * rb))
+        else:               # device-managed: only index tensors move
+            t_h2d = pcie_time(edges * 8 + rows_fetched * 8)
+        t_fwd = 2 * edges * self.store.row_dim * cfg.hidden / MATMUL_RATE
+
+        if self._pipelined:
+            e_sample = self.clock.schedule("host", start_v, t_sample)
+            # tier gathers overlap under the deep pipeline: bound by the
+            # slowest tier, not the sum (paper's overlap ordering)
+            e_io = self.clock.schedule("io", e_sample,
+                                       max(t_storage, t_host + t_dev))
+            end_v = self.clock.schedule("device", e_io, t_h2d + t_fwd)
+        else:
+            end_v = self.clock.schedule(
+                "serial", start_v,
+                t_sample + t_storage + t_host + t_dev + t_h2d + t_fwd)
+
+        self.scheduler.observe_service(end_v - start_v)
+
+        # --- complete futures + metrics ----------------------------------
+        st = self.stats
+        st.batches += 1
+        st.rows_requested += micro.rows_requested
+        st.rows_fetched += rows_fetched
+        st.storage_rows_naive += naive_storage
+        st.storage_rows_issued += issued_storage
+        st.virtual_end = max(self.clock.resources.values())
+        for req, logits, n_valid in zip(admitted, results, micro.n_valid):
+            lat = end_v - req.arrival_v
+            st.record(req.klass.name, lat)
+            req.future.set_result({"logits": logits[:n_valid],
+                                   "latency_v": lat,
+                                   "klass": req.klass.name})
+
+    # ------------------------------------------------------------------
+    def close(self):
+        """Shut down the shared cache/IO stack (joins engine workers)."""
+        self.cache.close()
+        self.io.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -135,3 +135,153 @@ def test_array_model_saturates_with_ssds():
     t12 = twelve.read_time(10000, 4096, 1024)
     assert t12 < t1
     assert twelve.peak_bw(4096) >= 6 * one.peak_bw(4096)
+
+
+def test_feature_store_round_robin_striping(store):
+    """Striping is true round-robin: row i -> shard i % n_shards, so hot
+    (low-id) prefixes spread evenly instead of saturating shard 0."""
+    hot_ids = np.arange(1024)                       # a hot low-id prefix
+    sid, off = store.locate(hot_ids)
+    counts = np.bincount(sid, minlength=store.n_shards)
+    assert counts.max() - counts.min() <= 1         # balanced to within 1
+    np.testing.assert_array_equal(sid, hot_ids % store.n_shards)
+    np.testing.assert_array_equal(off, hot_ids // store.n_shards)
+    # shard files hold exactly the round-robin row counts
+    for s, shard in enumerate(store.shards):
+        assert shard.shape[0] == len(range(s, store.n_rows, store.n_shards))
+
+
+def test_async_engine_close_joins_workers(store):
+    eng = AsyncIOEngine(store, worker_budget=0.3)
+    threads = list(eng._threads)
+    assert threads and all(t.is_alive() for t in threads)
+    eng.submit(np.arange(64)).wait()
+    eng.close()
+    assert not any(t.is_alive() for t in threads)
+    eng.close()                                     # idempotent
+
+
+def test_engines_are_context_managers(store):
+    with AsyncIOEngine(store, worker_budget=0.3) as eng:
+        data, _ = eng.submit(np.arange(32)).wait()
+        assert data.shape == (32, store.row_dim)
+    assert not eng._threads
+    with SyncIOEngine(store) as eng:
+        eng.submit(np.arange(8))
+
+
+def test_hetero_cache_close_owns_engine(store):
+    hot = np.arange(store.n_rows)[::-1].astype(np.int64)
+    cache = HeteroCache(store, hot, device_rows=64, host_rows=64)
+    owned = cache.io
+    threads = list(owned._threads)
+    cache.close()                                   # owns -> joins workers
+    assert not any(t.is_alive() for t in threads)
+
+    shared = AsyncIOEngine(store, worker_budget=0.3)
+    cache = HeteroCache(store, hot, device_rows=64, host_rows=64,
+                        io_engine=shared)
+    cache.close()                                   # shared -> left running
+    assert any(t.is_alive() for t in shared._threads)
+    shared.close()
+
+
+def test_presample_draws_unique_seeds():
+    class SpySampler:
+        def __init__(self):
+            self.seen = []
+
+        def sample(self, seeds):
+            self.seen.append(seeds)
+            from repro.gnn.sampling import MiniBatch
+            return MiniBatch(seeds, np.ones(len(seeds), bool), [], seeds,
+                             np.zeros(len(seeds), np.int64))
+
+    from repro.core.hotness import presample_gnn
+    spy = SpySampler()
+    presample_gnn(spy, seeds_per_batch=64, n_batches=4, n_rows=100)
+    assert len(spy.seen) == 4
+    for seeds in spy.seen:
+        assert len(np.unique(seeds)) == len(seeds)  # without replacement
+        assert len(seeds) == 64
+
+
+def test_pipeline_ablation_mode_ordering():
+    """On a fixed operator plan, virtual time orders deep < nopipe <= cpu
+    (the trainer's ablation axes, paper Figs. 5/11)."""
+    def mk_ops(host_cost):
+        return [
+            Operator("prep", lambda ctx: None, "host", (),
+                     lambda c: host_cost),
+            Operator("io", lambda ctx: None, "io", ("prep",),
+                     lambda c: 0.010),
+            Operator("train", lambda ctx: None, "device", ("io",),
+                     lambda c: 0.008),
+        ]
+    times = {}
+    for mode, host_cost in (("deep", 0.005), ("nopipe", 0.005),
+                            ("cpu", 0.020)):
+        pipe = PipelineExecutor(mk_ops(host_cost), mode=mode,
+                                prefetch_depth=3)
+        times[mode] = pipe.run(lambda i: {}, 8)["virtual_s"]
+        pipe.close()
+    assert times["deep"] < times["nopipe"] <= times["cpu"]
+
+
+def test_cache_stats_zero_batch_hit_rate():
+    from repro.core.hetero_cache import CacheStats
+    st = CacheStats()
+    assert st.hit_rate == 0.0                       # no division by zero
+    assert st.virtual_batch_time(pipelined=True) == 0.0
+
+
+def test_feature_store_rejects_unmarked_legacy_layout(tmp_path):
+    """Reopening a store directory without the round-robin layout marker
+    (i.e. written under the old contiguous partitioning) fails loudly
+    instead of silently permuting rows."""
+    import os
+    p = str(tmp_path / "legacy")
+    FeatureStore(p, n_rows=256, row_dim=8, n_shards=4, create=True,
+                 rng_seed=0)
+    # reopening a marked store is fine
+    FeatureStore(p, n_rows=256, row_dim=8, n_shards=4, create=False)
+    # reopening with different geometry (shard count) must also fail:
+    # same scheme, different striping -> silently permuted rows otherwise
+    with pytest.raises(ValueError, match="layout"):
+        FeatureStore(p, n_rows=256, row_dim=8, n_shards=8, create=False)
+    os.remove(os.path.join(p, "LAYOUT"))
+    with pytest.raises(ValueError, match="layout"):
+        FeatureStore(p, n_rows=256, row_dim=8, n_shards=4, create=False)
+
+
+def test_presample_stream_decorrelated_from_trainer_batches():
+    """Presample must NOT draw the same seed batches the trainer will
+    train on (oracle placement would inflate measured hit rates)."""
+    train_rng = np.random.default_rng(0)              # trainer's make_ctx
+    train_batch = train_rng.choice(100, size=16, replace=False)
+
+    class SpySampler:
+        def __init__(self):
+            self.seen = []
+
+        def sample(self, seeds):
+            self.seen.append(seeds)
+            from repro.gnn.sampling import MiniBatch
+            return MiniBatch(seeds, np.ones(len(seeds), bool), [], seeds,
+                             np.zeros(len(seeds), np.int64))
+
+    from repro.core.hotness import presample_gnn
+    spy = SpySampler()
+    presample_gnn(spy, seeds_per_batch=16, n_batches=1, n_rows=100, seed=0)
+    assert not np.array_equal(spy.seen[0], train_batch)
+
+
+def test_async_engine_close_resolves_queued_tickets(store):
+    """close() drains before stopping: every ticket submitted before the
+    close resolves instead of stranding its waiter."""
+    eng = AsyncIOEngine(store, worker_budget=0.3)
+    tickets = [eng.submit(np.arange(256)) for _ in range(16)]
+    eng.close()                                     # no waits in between
+    for tk in tickets:
+        data, _ = tk.wait()                         # must not deadlock
+        assert data.shape == (256, store.row_dim)

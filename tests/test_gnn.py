@@ -68,11 +68,14 @@ def test_gnn_loss_grad(model, graph):
 def test_out_of_core_training_improves(tmp_path, mode, graph):
     store = FeatureStore(str(tmp_path / "f"), n_rows=5000, row_dim=32,
                          n_shards=4, create=True, rng_seed=3)
-    tr = OutOfCoreGNNTrainer(graph, store, TrainerConfig(
-        mode=mode, batch_size=64, fanouts=(4, 3), hidden=32,
-        presample_batches=2))
-    out = tr.train(6)
-    assert out["loss_last"] < out["loss_first"]
-    assert out["cache"]["storage_misses"] >= 0
-    if mode == "helios":
-        assert out["cache"]["hit_rate"] > 0
+    with OutOfCoreGNNTrainer(graph, store, TrainerConfig(
+            mode=mode, batch_size=64, fanouts=(4, 3), hidden=32,
+            presample_batches=2)) as tr:
+        out = tr.train(10)
+        # trend over windows, not endpoints: single-step loss is noisy at
+        # this scale, the first/last-3 means decrease reliably
+        losses = [m["loss"] for m in tr.metrics_log]
+        assert np.mean(losses[-3:]) < np.mean(losses[:3])
+        assert out["cache"]["storage_misses"] >= 0
+        if mode == "helios":
+            assert out["cache"]["hit_rate"] > 0

@@ -1,4 +1,8 @@
 """Hypothesis property tests on system invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dep: skip, don't abort collection
+
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax
