@@ -24,6 +24,10 @@ def main():
     ap.add_argument("--dim", type=int, default=512)
     ap.add_argument("--model", default="sage", choices=["sage", "gcn"])
     ap.add_argument("--seeds-per-request", type=int, default=32)
+    ap.add_argument("--cache-policy", default="static",
+                    choices=["static", "online"],
+                    help="online re-derives cache placement from the live "
+                         "request stream (asynchronous tier migration)")
     args = ap.parse_args()
 
     root = tempfile.mkdtemp(prefix="helios_serve_")
@@ -42,16 +46,20 @@ def main():
                            request_batch_size=args.seeds_per_request,
                            fanouts=(8, 4), hidden=128,
                            device_cache_frac=0.02, host_cache_frac=0.05,
+                           cache_policy=args.cache_policy,
+                           refresh_every=4, policy_half_life=8.0,
                            max_batch_requests=8, seed=0)
         with GNNInferenceServer(g, store, cfg) as srv:
             for seeds, arrival, klass in wl:
                 srv.submit(seeds, klass, arrival)
             st = srv.flush()
+            cs = srv.cache.stats
             print(f"[{mode:7s}] {st.served:4d} served, "
                   f"{st.rejected_total:3d} shed | {st.throughput_rps():8.0f} "
                   f"req/s | p50 {st.percentile(50)*1e6:7.0f} us | "
                   f"p99 {st.percentile(99)*1e6:7.0f} us | dedup saves "
-                  f"{st.dedup_storage_savings:.0%} storage reads")
+                  f"{st.dedup_storage_savings:.0%} storage reads | cache hit "
+                  f"{cs.hit_rate:.0%} ({cs.refreshes} refreshes)")
 
 
 if __name__ == "__main__":

@@ -2,11 +2,26 @@
 
 Three tiers: device HBM (hottest rows, ~2 TB/s), host DRAM (second-hottest
 rows + all topology, PCIe-fed), storage shards (everything, via the async
-IO stack).  Placement is the static pre-sampling hotness policy
-(``hotness.placement``).  Lookup is device-parallel: the location/slot
-translation tables live with the request batch and the three tier gathers
-are issued together — storage first (longest latency), then host, then
-device — exactly the paper's overlap ordering.
+IO stack).  Placement is owned by a pluggable ``core.policy`` policy —
+static pre-sampling by default, online decayed-count or offline-oracle on
+request — and the tiers are *mutable*: ``refresh()`` promotes/demotes rows
+between device/host/storage through the existing ``AsyncIOEngine``
+tickets, so migration rides the same bounded IO stack as gathers and can
+be scheduled on the pipeline's io resource to hide under device compute.
+
+Gathers are split-phase so the trainer's operator pipeline and the serving
+micro-batcher share ONE code path and ONE stats accounting site:
+
+    pending = cache.submit_planned(ids)    # plan + async storage submit
+    cache.lookup_planned(pending)          # host + device tier gathers
+    rows = cache.complete_planned(pending) # wait IO, account, feed policy
+
+``gather`` is the fused convenience form.  Lookup is device-parallel: the
+location/slot translation tables are snapshotted per request batch, so a
+concurrent refresh (which swaps fresh tables/tier arrays rather than
+mutating in place) never corrupts an in-flight gather — the three tier
+gathers are issued storage first (longest latency), then host, then
+device, exactly the paper's overlap ordering.
 
 On real TPU hardware the device-tier gather is the Pallas kernel in
 ``repro.kernels.gather``; here the jnp fallback is used and the Pallas
@@ -14,13 +29,15 @@ kernel is validated in interpret mode by the kernel tests.
 """
 from __future__ import annotations
 
+import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import hotness as hotness_mod
-from repro.core.iostack import AsyncIOEngine, FeatureStore, IOStats
+from repro.core.iostack import AsyncIOEngine, FeatureStore
+from repro.core.policy import (CachePolicy, StaticPresamplePolicy,
+                               tables_from_sets)
 from repro.core.simulator import (DEFAULT_ENVELOPE, HardwareEnvelope,
                                   dram_gather_time, hbm_gather_time,
                                   pcie_time)
@@ -36,6 +53,12 @@ class CacheStats:
     virtual_storage_s: float = 0.0
     wall_s: float = 0.0
     batches: int = 0
+    # tier-migration accounting (refresh())
+    refreshes: int = 0
+    promotions: int = 0                 # rows moved to a faster tier
+    demotions: int = 0                  # rows moved to a slower tier
+    migrated_bytes: int = 0
+    virtual_migrate_s: float = 0.0
 
     @property
     def hit_rate(self):
@@ -46,6 +69,54 @@ class CacheStats:
         """Per-call data-path time: tiers overlap when pipelined."""
         ts = (self.virtual_device_s, self.virtual_host_s, self.virtual_storage_s)
         return max(ts) if pipelined else sum(ts)
+
+
+@dataclass
+class RefreshResult:
+    """One ``refresh()``: how much moved and what it costs in virtual time."""
+    promotions: int = 0
+    demotions: int = 0
+    device_in: int = 0                  # rows newly resident in HBM
+    host_in: int = 0                    # rows newly resident in DRAM
+    moved_bytes: int = 0
+    virtual_s: float = 0.0
+
+
+class PendingGather:
+    """In-flight split-phase gather: tier plan + table/tier snapshot.
+
+    The snapshot pins the translation tables and tier arrays this gather
+    planned against; ``refresh()`` swaps fresh arrays in, so the pending
+    gather stays internally consistent no matter when migration lands.
+    """
+
+    __slots__ = ("ids", "plan", "out", "ticket", "device_tier", "host_tier",
+                 "t0", "done", "_looked", "_dev_rows", "_lk")
+
+    def __init__(self, ids, plan, out, ticket, device_tier, host_tier):
+        self.ids = ids
+        self.plan = plan
+        self.out = out
+        self.ticket = ticket
+        self.device_tier = device_tier
+        self.host_tier = host_tier
+        self.t0 = time.perf_counter()
+        self.done = False
+        self._looked = False
+        self._dev_rows = None
+        self._lk = threading.Lock()
+
+    @property
+    def n_device(self) -> int:
+        return len(self.plan[0][0])
+
+    @property
+    def n_host(self) -> int:
+        return len(self.plan[1][0])
+
+    @property
+    def n_storage(self) -> int:
+        return len(self.plan[2][0])
 
 
 def tier_rows(mode: str, n_vertices: int, device_frac: float,
@@ -65,93 +136,254 @@ def tier_rows(mode: str, n_vertices: int, device_frac: float,
 
 
 class HeteroCache:
-    """Hotness-placed 3-tier feature cache."""
+    """Policy-placed 3-tier feature cache with asynchronous tier migration."""
 
-    def __init__(self, store: FeatureStore, hotness: np.ndarray,
-                 device_rows: int, host_rows: int,
+    def __init__(self, store: FeatureStore, hotness: np.ndarray | None = None,
+                 device_rows: int = 0, host_rows: int = 0,
                  io_engine: AsyncIOEngine | None = None,
-                 env: HardwareEnvelope = DEFAULT_ENVELOPE):
+                 env: HardwareEnvelope = DEFAULT_ENVELOPE,
+                 policy: CachePolicy | None = None):
         self.store = store
         self.env = env
         self._owns_engine = io_engine is None
         self.io = io_engine or AsyncIOEngine(store, env=env)
-        self.loc, self.slot = hotness_mod.placement(hotness, device_rows, host_rows)
-        order = np.argsort(-hotness, kind="stable")
-        dev_ids = order[:device_rows]
-        host_ids = order[device_rows:device_rows + host_rows]
+        if policy is None:
+            policy = StaticPresamplePolicy(
+                np.zeros(store.n_rows) if hotness is None else hotness)
+        self.policy = policy
+        self.device_rows = min(device_rows, store.n_rows)
+        self.host_rows = min(host_rows, store.n_rows - self.device_rows)
+        scores = np.asarray(policy.initial_scores() if hotness is None
+                            else hotness)
+        if len(scores) != store.n_rows:
+            raise ValueError("hotness length != store.n_rows")
+        order = np.argsort(-scores, kind="stable")
+        self._dev_ids = order[:self.device_rows]
+        self._host_ids = order[self.device_rows:
+                               self.device_rows + self.host_rows]
+        self.loc, self.slot = tables_from_sets(store.n_rows, self._dev_ids,
+                                               self._host_ids)
         # device tier: jnp array (HBM); host tier: pinned numpy
         import jax.numpy as jnp
-        self.device_tier = (jnp.asarray(store.read_rows(dev_ids))
-                            if len(dev_ids) else jnp.zeros((0, store.row_dim)))
-        self.host_tier = (store.read_rows(host_ids)
-                          if len(host_ids) else
+        self.device_tier = (jnp.asarray(store.read_rows(self._dev_ids))
+                            if len(self._dev_ids)
+                            else jnp.zeros((0, store.row_dim)))
+        self.host_tier = (store.read_rows(self._host_ids)
+                          if len(self._host_ids) else
                           np.zeros((0, store.row_dim), store.dtype))
         self.stats = CacheStats()
+        self._table_lock = threading.Lock()     # table/tier swap + snapshot
+        self._stats_lock = threading.Lock()     # one accounting site, many threads
+        # reentrant: maybe_refresh() holds it across due-check + refresh()
+        self._refresh_lock = threading.RLock()
 
     # ------------------------------------------------------------------
-    def plan(self, ids: np.ndarray):
+    # split-phase gather: the ONE tier-plan/gather/stats code path
+    # ------------------------------------------------------------------
+    def plan(self, ids: np.ndarray, loc=None, slot=None):
         """Split a request batch by tier -> (dev, host, disk) x (slot, dest)."""
-        loc = self.loc[ids]
-        slot = self.slot[ids]
+        loc = self.loc if loc is None else loc
+        slot = self.slot if slot is None else slot
+        where = loc[ids]
+        slots = slot[ids]
         dest = np.arange(len(ids))
-        d = loc == 0
-        h = loc == 1
-        s = loc == 2
-        return ((slot[d], dest[d]), (slot[h], dest[h]), (ids[s], dest[s]))
+        d = where == 0
+        h = where == 1
+        m = where == 2
+        return ((slots[d], dest[d]), (slots[h], dest[h]), (ids[m], dest[m]))
 
-    def gather(self, ids: np.ndarray, pipelined: bool = True) -> np.ndarray:
-        """Fetch feature rows for ``ids`` through the hierarchy."""
-        return self.gather_planned(ids, self.plan(ids))
+    def submit_planned(self, ids: np.ndarray,
+                       n_rows: int | None = None) -> PendingGather:
+        """Phase 1: snapshot tables, split by tier, and fire the storage
+        submission (longest latency first — paper ordering).  ``n_rows``
+        pads the output buffer (trainer batches are shape-padded)."""
+        with self._table_lock:
+            loc, slot = self.loc, self.slot
+            device_tier, host_tier = self.device_tier, self.host_tier
+        plan = self.plan(ids, loc, slot)
+        n_out = len(ids) if n_rows is None else n_rows
+        out = np.zeros((n_out, self.store.row_dim), self.store.dtype)
+        sids, sdest = plan[2]
+        ticket = self.io.submit(sids, out, sdest) if len(sids) else None
+        return PendingGather(ids, plan, out, ticket, device_tier, host_tier)
 
-    def gather_planned(self, ids: np.ndarray, plan) -> np.ndarray:
-        """``gather`` with a precomputed tier plan.
+    def lookup_planned(self, pg: PendingGather) -> None:
+        """Phase 2: host-tier gather into the buffer + device-tier gather
+        issue (HBM-parallel; Pallas kernel on real TPU).  Idempotent."""
+        import jax.numpy as jnp
+        with pg._lk:
+            if pg._looked:
+                return
+            (dslot, _), (hslot, hdest), _ = pg.plan
+            if len(hslot):
+                pg.out[hdest] = pg.host_tier[hslot]
+            if len(dslot):
+                pg._dev_rows = jnp.take(pg.device_tier, jnp.asarray(dslot),
+                                        axis=0)
+            pg._looked = True
 
-        Consumers that plan once and reuse the split (the serving
-        micro-batcher dedups node ids across requests, plans the unique
-        set, then gathers exactly once) call this to avoid a second
-        translation pass.
+    def complete_planned(self, pg: PendingGather) -> np.ndarray:
+        """Phase 3: wait out the storage ticket, land the device rows,
+        account stats ONCE, and feed the access stream to the policy."""
+        self.lookup_planned(pg)
+        if pg.ticket is not None:
+            pg.ticket.wait()
+        with pg._lk:
+            if pg.done:
+                return pg.out
+            if pg._dev_rows is not None:
+                pg.out[pg.plan[0][1]] = np.asarray(pg._dev_rows)
+            pg.done = True
+
+        rb = self.store.row_bytes
+        n_dev, n_host, n_sto = pg.n_device, pg.n_host, pg.n_storage
+        with self._stats_lock:
+            st = self.stats
+            st.device_hits += n_dev
+            st.host_hits += n_host
+            st.storage_misses += n_sto
+            st.virtual_device_s += hbm_gather_time(n_dev * rb, self.env)
+            st.virtual_host_s += (dram_gather_time(n_host * rb, self.env)
+                                  + pcie_time(n_host * rb, self.env))
+            if n_sto:
+                st.virtual_storage_s += self.io.model.read_time(
+                    n_sto, rb, self.env.nvme_queue_depth)
+            st.wall_s += time.perf_counter() - pg.t0
+            st.batches += 1
+        self.policy.record(pg.ids)
+        return pg.out
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        """Fetch feature rows for ``ids`` through the hierarchy (fused
+        split-phase gather)."""
+        return self.complete_planned(self.submit_planned(ids))
+
+    # ------------------------------------------------------------------
+    # asynchronous tier migration
+    # ------------------------------------------------------------------
+    def refresh(self, scores: np.ndarray) -> RefreshResult:
+        """Re-derive placement from ``scores`` and migrate the differences.
+
+        Incoming rows are staged from their fastest current holder — host
+        rows promoted to HBM copy over PCIe, everything else rides one
+        batched ticket per tier through the async IO engine — then fresh
+        translation tables and tier arrays are swapped in atomically.
+        In-flight gathers keep their snapshot of the old arrays, so
+        migration never tears a concurrent lookup.
         """
         import jax.numpy as jnp
-        t0 = time.perf_counter()
-        (dslot, ddest), (hslot, hdest), (sids, sdest) = plan
-        out = np.empty((len(ids), self.store.row_dim), self.store.dtype)
+        if len(scores) != self.store.n_rows:
+            raise ValueError("scores length != store.n_rows")
+        with self._refresh_lock:
+            order = np.argsort(-np.asarray(scores), kind="stable")
+            new_dev = order[:self.device_rows]
+            new_host = order[self.device_rows:
+                             self.device_rows + self.host_rows]
+            old_loc, old_slot = self.loc, self.slot
+            cur_dev, cur_host = self._dev_ids, self._host_ids
 
-        # 1. storage first: async submit, longest latency (paper ordering)
-        ticket = self.io.submit(sids, out, sdest) if len(sids) else None
-        # 2. host tier gather (DRAM -> staging -> device over PCIe)
-        if len(hslot):
-            out[hdest] = self.host_tier[hslot]
-        # 3. device tier gather (HBM-parallel; Pallas kernel on real TPU)
-        dev_rows = None
-        if len(dslot):
-            dev_rows = jnp.take(self.device_tier, jnp.asarray(dslot), axis=0)
-        # 4. completion handling
-        if ticket is not None:
-            ticket.wait()
-        if dev_rows is not None:
-            out[ddest] = np.asarray(dev_rows)
+            dev_keep = np.isin(cur_dev, new_dev, assume_unique=True)
+            dev_free = np.where(~dev_keep)[0]
+            dev_in = np.setdiff1d(new_dev, cur_dev, assume_unique=True)
+            host_keep = np.isin(cur_host, new_host, assume_unique=True)
+            host_free = np.where(~host_keep)[0]
+            host_in = np.setdiff1d(new_host, cur_host, assume_unique=True)
 
-        # virtual-time accounting per tier
-        rb = self.store.row_bytes
-        st = self.stats
-        st.device_hits += len(dslot)
-        st.host_hits += len(hslot)
-        st.storage_misses += len(sids)
-        st.virtual_device_s += hbm_gather_time(len(dslot) * rb, self.env)
-        st.virtual_host_s += (dram_gather_time(len(hslot) * rb, self.env)
-                              + pcie_time(len(hslot) * rb, self.env))
-        if len(sids):
-            st.virtual_storage_s += self.io.model.read_time(
-                len(sids), rb, self.env.nvme_queue_depth)
-        st.wall_s += time.perf_counter() - t0
-        st.batches += 1
-        return out
+            rb = self.store.row_bytes
+            res = RefreshResult(device_in=len(dev_in), host_in=len(host_in))
+            if len(dev_in) or len(host_in):
+                tickets = []
+                # admissions to HBM: promote from DRAM when resident there,
+                # otherwise pull through the storage stack
+                dev_buf = np.empty((len(dev_in), self.store.row_dim),
+                                   self.store.dtype)
+                from_host = old_loc[dev_in] == 1
+                if from_host.any():
+                    dev_buf[from_host] = \
+                        self.host_tier[old_slot[dev_in[from_host]]]
+                miss = np.where(~from_host)[0]
+                if len(miss):
+                    tickets.append(self.io.submit(dev_in[miss], dev_buf,
+                                                  miss, tag="refresh"))
+                # admissions to DRAM: demotions copy back from HBM,
+                # storage promotions ride a second ticket
+                host_buf = np.empty((len(host_in), self.store.row_dim),
+                                    self.store.dtype)
+                from_dev = old_loc[host_in] == 0
+                if from_dev.any():
+                    host_buf[from_dev] = np.asarray(jnp.take(
+                        self.device_tier,
+                        jnp.asarray(old_slot[host_in[from_dev]]), axis=0))
+                miss_h = np.where(~from_dev)[0]
+                if len(miss_h):
+                    tickets.append(self.io.submit(host_in[miss_h], host_buf,
+                                                  miss_h, tag="refresh"))
+                for tk in tickets:
+                    tk.wait()
 
-    def gather_device(self, ids_dev, fallback: np.ndarray | None = None):
-        """Pure device-tier lookup for jit'd consumers (hot rows only)."""
-        import jax.numpy as jnp
-        return jnp.take(self.device_tier, ids_dev, axis=0)
+                # copy-on-refresh: build NEW tables/tiers, swap atomically
+                new_dev_ids = cur_dev.copy()
+                new_dev_ids[dev_free] = dev_in
+                new_host_ids = cur_host.copy()
+                new_host_ids[host_free] = host_in
+                device_tier = self.device_tier
+                if len(dev_in):
+                    device_tier = device_tier.at[jnp.asarray(dev_free)].set(
+                        jnp.asarray(dev_buf))
+                host_tier = self.host_tier
+                if len(host_in):
+                    host_tier = host_tier.copy()
+                    host_tier[host_free] = host_buf
+                loc, slot = tables_from_sets(self.store.n_rows, new_dev_ids,
+                                             new_host_ids)
 
+                n_sto_in = len(dev_in) - int(from_host.sum()) \
+                    + len(host_in) - int(from_dev.sum())
+                virt = pcie_time((int(from_host.sum())
+                                  + int(from_dev.sum())) * rb, self.env)
+                if n_sto_in:
+                    virt += self.io.model.read_time(
+                        n_sto_in, rb, self.env.nvme_queue_depth)
+                res.promotions = int((loc < old_loc).sum())
+                res.demotions = int((loc > old_loc).sum())
+                res.moved_bytes = (len(dev_in) + len(host_in)) * rb
+                res.virtual_s = virt
+
+                with self._table_lock:
+                    self.loc, self.slot = loc, slot
+                    self.device_tier, self.host_tier = device_tier, host_tier
+                    self._dev_ids, self._host_ids = new_dev_ids, new_host_ids
+
+            with self._stats_lock:
+                st = self.stats
+                st.refreshes += 1
+                st.promotions += res.promotions
+                st.demotions += res.demotions
+                st.migrated_bytes += res.moved_bytes
+                st.virtual_migrate_s += res.virtual_s
+            return res
+
+    def maybe_refresh(self) -> RefreshResult | None:
+        """Ask the policy whether placement should change; migrate if so.
+        Scheduled as the ``cache_refresh`` pipeline operator (io resource)
+        so migration hides under device compute.  The due-check is
+        re-validated under the refresh lock: concurrent operators (deep
+        pipeline, 2 io workers) must not both act on one due signal and
+        double-migrate from stale scores."""
+        pol = self.policy
+        if pol is None or not pol.refresh_due():
+            return None
+        with self._refresh_lock:
+            if not pol.refresh_due():       # another operator got here first
+                return None
+            scores = pol.placement_scores(self.loc)
+            if scores is None:
+                return None
+            res = self.refresh(scores)
+            pol.refreshed()
+        return res
+
+    # ------------------------------------------------------------------
     def close(self):
         """Shut down the IO engine iff this cache created it; shared
         engines are closed by their owner (trainer/server)."""

@@ -1,13 +1,17 @@
-"""Pre-sampling hotness policy (paper §3.2.2, after Legion/GNNLab).
+"""Pre-sampling hotness *measurement* (paper §3.2.2, after Legion/GNNLab).
 
 Before training starts, run one epoch of the *actual* access pattern
 (neighbor sampling for GNNs; router statistics for MoE; token frequencies
-for embeddings), count per-row accesses, and place the hottest rows in the
-device tier, the second-hottest in the host tier, the rest on storage.
+for embeddings) and count per-row accesses.  The resulting counts seed a
+``core.policy`` cache policy; placement itself (rank by score, hottest to
+the device tier) lives in ``core.policy.placement`` and is re-exported
+here for compatibility.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from repro.core.policy import placement  # noqa: F401  (compat re-export)
 
 
 def presample_gnn(sampler, seeds_per_batch: int, n_batches: int,
@@ -40,22 +44,3 @@ def expert_hotness(routing_counts: np.ndarray) -> np.ndarray:
     return routing_counts.astype(np.int64)
 
 
-def placement(hotness: np.ndarray, device_rows: int, host_rows: int):
-    """Static placement: returns (loc, slot) arrays.
-
-    loc[i]  in {0: device, 1: host, 2: storage}
-    slot[i] = index within its tier.
-    """
-    n = len(hotness)
-    order = np.argsort(-hotness, kind="stable")
-    loc = np.full(n, 2, np.int8)
-    slot = np.zeros(n, np.int64)
-    dev = order[:device_rows]
-    host = order[device_rows:device_rows + host_rows]
-    disk = order[device_rows + host_rows:]
-    loc[dev] = 0
-    loc[host] = 1
-    slot[dev] = np.arange(len(dev))
-    slot[host] = np.arange(len(host))
-    slot[disk] = disk                      # storage is addressed by row id
-    return loc, slot

@@ -201,6 +201,10 @@ class AsyncIOEngine:
                 fut.set_result((data if out is None else None, virt))
             except Exception as e:      # pragma: no cover
                 fut.set_exception(e)
+            finally:
+                # pairs with drain()'s Queue.join(): the item only counts
+                # as done once its read landed and its future resolved
+                self._sq.task_done()
 
     def close(self):
         """Drain, stop, and JOIN the worker threads (idempotent).
@@ -230,8 +234,12 @@ class AsyncIOEngine:
         return False
 
     def drain(self):
-        while not self._sq.empty():
-            time.sleep(0.001)
+        """Block until every submitted request has COMPLETED, not merely
+        been popped: ``Queue.empty()`` turns true while a worker is still
+        mid-read on the last item, so ``join()``/``task_done()`` semantics
+        are what make close() safe to join on.  Only meaningful while
+        workers are alive — close() guards accordingly."""
+        self._sq.join()
 
 
 class SyncIOEngine:

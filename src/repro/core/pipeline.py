@@ -1,8 +1,10 @@
 """Deep GNN-aware pipeline (paper §3.3, TPU-adapted).
 
-The training procedure is decomposed into GPU-initiated operators — per-hop
-``sample`` -> ``io_submit`` -> ``io_complete`` -> ``cache_lookup`` ->
-``batch_build`` -> ``train`` — scheduled on a two-level pipeline:
+The training procedure is decomposed into GPU-initiated operators —
+``sample`` -> ``io_submit`` -> {``cache_lookup``, ``io_complete``} ->
+``batch_build`` -> ``train``, plus ``cache_refresh`` riding the io
+resource (the authoritative plan is ``gnn.train._operators``) — scheduled
+on a two-level pipeline:
 
   * intra-mini-batch: operators of one mini-batch with no mutual dependency
     run concurrently (hop h+1 sampling overlaps hop h's storage IO);
@@ -158,12 +160,3 @@ class PipelineExecutor:
     def close(self):
         for p in self.pools.values():
             p.shutdown(wait=False)
-
-
-def gnn_plan(hops: int) -> list[str]:
-    """Operator name sequence for an ``hops``-hop GNN mini-batch (Fig. 4)."""
-    names = []
-    for h in range(hops):
-        names += [f"sample_h{h}", f"io_submit_h{h}"]
-    names += [f"io_complete", "cache_lookup", "batch_build", "train"]
-    return names

@@ -1,0 +1,222 @@
+"""Pluggable cache-placement policies (paper §3.2; Ginex-informed).
+
+The heterogeneous cache asks its policy three questions: where should rows
+live *now* (``placement_scores``), has the answer changed enough to act on
+(``refresh_due``), and — continuously — what is the workload actually
+touching (``record``, fed from the unified gather path).  Placement itself
+is mechanical: rank rows by score, top ``device_rows`` to HBM, next
+``host_rows`` to DRAM, rest stay on storage (``placement``).
+
+Policies:
+  * StaticPresamplePolicy — the original one-shot pre-sampling placement
+    (extracted from ``hotness``): scores are frozen at construction, no
+    refresh is ever due.
+  * OnlineDecayPolicy     — decayed-count (EWMA) hotness over the live
+    access stream with hysteresis: resident rows get a score boost so a
+    challenger must be clearly hotter to trigger migration, and refreshes
+    are only due every ``refresh_every`` recorded batches.
+  * OracleOfflinePolicy   — Ginex-style offline upper bound: it is handed
+    the full future access trace and places by the access counts of the
+    *upcoming* window at every window boundary.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+
+def placement(hotness: np.ndarray, device_rows: int, host_rows: int):
+    """Rank-by-hotness placement: returns (loc, slot) arrays.
+
+    loc[i]  in {0: device, 1: host, 2: storage}
+    slot[i] = index within its tier (storage is addressed by row id).
+    """
+    order = np.argsort(-np.asarray(hotness), kind="stable")
+    return tables_from_sets(len(hotness), order[:device_rows],
+                            order[device_rows:device_rows + host_rows])
+
+
+def tables_from_sets(n_rows: int, dev_ids: np.ndarray,
+                     host_ids: np.ndarray):
+    """(loc, slot) translation tables for explicit tier membership, where
+    ``dev_ids[s]`` / ``host_ids[s]`` is the row held in tier slot ``s``."""
+    loc = np.full(n_rows, 2, np.int8)
+    slot = np.arange(n_rows, dtype=np.int64)   # storage: slot == row id
+    loc[dev_ids] = 0
+    slot[dev_ids] = np.arange(len(dev_ids))
+    loc[host_ids] = 1
+    slot[host_ids] = np.arange(len(host_ids))
+    return loc, slot
+
+
+@runtime_checkable
+class CachePolicy(Protocol):
+    """What ``HeteroCache`` needs from a placement policy."""
+
+    name: str
+
+    def initial_scores(self) -> np.ndarray:
+        """Hotness scores for the construction-time placement."""
+        ...
+
+    def record(self, ids: np.ndarray) -> None:
+        """Observe one gathered batch of row ids (the live access stream)."""
+        ...
+
+    def refresh_due(self) -> bool:
+        """Should the cache re-derive placement now?"""
+        ...
+
+    def placement_scores(self, loc: np.ndarray | None = None):
+        """Current scores (``None`` = keep placement).  ``loc`` is the live
+        location table so the policy can favour residents (hysteresis)."""
+        ...
+
+    def refreshed(self) -> None:
+        """Notification that the cache applied a refresh."""
+        ...
+
+
+class StaticPresamplePolicy:
+    """Frozen pre-sampling placement — the original cache behavior."""
+
+    name = "static"
+
+    def __init__(self, hotness: np.ndarray):
+        self._scores = np.asarray(hotness, np.float64)
+
+    def initial_scores(self) -> np.ndarray:
+        return self._scores.copy()
+
+    def record(self, ids: np.ndarray) -> None:
+        pass
+
+    def refresh_due(self) -> bool:
+        return False
+
+    def placement_scores(self, loc: np.ndarray | None = None) -> np.ndarray:
+        return self._scores.copy()
+
+    def refreshed(self) -> None:
+        pass
+
+
+class OnlineDecayPolicy:
+    """EWMA/decayed-count hotness from the live access stream.
+
+    Per recorded batch every score decays by ``0.5 ** (1 / half_life)`` and
+    touched rows gain one count, so the score is an exponentially-weighted
+    access frequency with a ``half_life``-batch memory.  ``hysteresis``
+    multiplies resident (cached) scores by ``1 + hysteresis`` at placement
+    time: a challenger must beat an incumbent by that margin before the
+    cache migrates, which stops near-tie rows from thrashing between
+    tiers.  A refresh is only proposed every ``refresh_every`` batches.
+    """
+
+    name = "online"
+
+    def __init__(self, n_rows: int, init_scores: np.ndarray | None = None,
+                 half_life: float = 16.0, refresh_every: int = 8,
+                 hysteresis: float = 0.1):
+        if refresh_every < 1:
+            raise ValueError("refresh_every must be >= 1")
+        self._scores = (np.zeros(n_rows, np.float64) if init_scores is None
+                        else np.asarray(init_scores, np.float64).copy())
+        if len(self._scores) != n_rows:
+            raise ValueError("init_scores length != n_rows")
+        self.decay = 0.5 ** (1.0 / half_life)
+        self.refresh_every = refresh_every
+        self.hysteresis = hysteresis
+        self._since_refresh = 0
+        self._lock = threading.Lock()
+
+    def initial_scores(self) -> np.ndarray:
+        return self._scores.copy()
+
+    def record(self, ids: np.ndarray) -> None:
+        with self._lock:
+            self._scores *= self.decay
+            np.add.at(self._scores, np.asarray(ids), 1.0)
+            self._since_refresh += 1
+
+    def refresh_due(self) -> bool:
+        return self._since_refresh >= self.refresh_every
+
+    def placement_scores(self, loc: np.ndarray | None = None) -> np.ndarray:
+        with self._lock:
+            s = self._scores.copy()
+        if loc is not None and self.hysteresis:
+            s[loc < 2] *= 1.0 + self.hysteresis
+        return s
+
+    def refreshed(self) -> None:
+        with self._lock:
+            self._since_refresh = 0
+
+
+class OracleOfflinePolicy:
+    """Offline-optimal upper bound (after Ginex's provably-optimal cache):
+    the policy is handed the complete future access trace and, at every
+    ``window``-batch boundary, places by the counts of the *next* window —
+    placement that no online policy can beat on the same cadence."""
+
+    name = "oracle"
+
+    def __init__(self, n_rows: int, trace, window: int = 8):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.n_rows = n_rows
+        self.trace = [np.asarray(t) for t in trace]
+        self.window = window
+        self._cursor = 0
+        self._due = False
+        self._lock = threading.Lock()
+
+    def _window_counts(self, start: int) -> np.ndarray:
+        counts = np.zeros(self.n_rows, np.float64)
+        for batch in self.trace[start:start + self.window]:
+            np.add.at(counts, batch, 1.0)
+        return counts
+
+    def initial_scores(self) -> np.ndarray:
+        return self._window_counts(0)
+
+    def record(self, ids: np.ndarray) -> None:
+        with self._lock:
+            self._cursor += 1
+            if self._cursor % self.window == 0:
+                self._due = True
+
+    def refresh_due(self) -> bool:
+        return self._due and self._cursor < len(self.trace)
+
+    def placement_scores(self, loc: np.ndarray | None = None):
+        counts = self._window_counts(self._cursor)
+        return counts if counts.any() else None
+
+    def refreshed(self) -> None:
+        with self._lock:
+            self._due = False
+
+
+def make_policy(kind: str, n_rows: int,
+                presample: np.ndarray | None = None, trace=None,
+                refresh_every: int = 8, half_life: float = 16.0,
+                hysteresis: float = 0.1) -> CachePolicy:
+    """Policy factory shared by the trainer, the server, and benchmarks."""
+    if kind == "static":
+        return StaticPresamplePolicy(
+            np.zeros(n_rows) if presample is None else presample)
+    if kind == "online":
+        return OnlineDecayPolicy(n_rows, init_scores=presample,
+                                 half_life=half_life,
+                                 refresh_every=refresh_every,
+                                 hysteresis=hysteresis)
+    if kind == "oracle":
+        if trace is None:
+            raise ValueError("oracle policy requires the full access trace")
+        return OracleOfflinePolicy(n_rows, trace, window=refresh_every)
+    raise ValueError(f"unknown cache policy {kind!r} "
+                     "(expected static | online | oracle)")

@@ -27,6 +27,7 @@ from repro.core import hotness as hotness_mod
 from repro.core.hetero_cache import HeteroCache, tier_rows
 from repro.core.iostack import FeatureStore, make_engine
 from repro.core.pipeline import Operator, PipelineExecutor
+from repro.core.policy import make_policy
 from repro.core.simulator import (DEFAULT_ENVELOPE, HOST_STAGE_BW,
                                   MATMUL_RATE, SAMPLE_RATE_CPU,
                                   SAMPLE_RATE_DEVICE, pcie_time)
@@ -48,6 +49,10 @@ class TrainerConfig:
     prefetch_depth: int = 2
     io_worker_budget: float = 0.3
     presample_batches: int = 8
+    cache_policy: str = "static"   # static | online (core.policy)
+    refresh_every: int = 8         # batches between refresh checks (online)
+    policy_half_life: float = 16.0
+    policy_hysteresis: float = 0.1
     lr: float = 1e-3
     seed: int = 0
 
@@ -72,7 +77,12 @@ class OutOfCoreGNNTrainer:
         dev_rows, host_rows = tier_rows(cfg.mode, graph.n_vertices,
                                         cfg.device_cache_frac,
                                         cfg.host_cache_frac)
-        self.cache = HeteroCache(store, hot, dev_rows, host_rows, self.io)
+        policy = make_policy(cfg.cache_policy, graph.n_vertices,
+                             presample=hot, refresh_every=cfg.refresh_every,
+                             half_life=cfg.policy_half_life,
+                             hysteresis=cfg.policy_hysteresis)
+        self.cache = HeteroCache(store, None, dev_rows, host_rows, self.io,
+                                 policy=policy)
 
         # --- model + optimizer -------------------------------------------
         key = jax.random.key(cfg.seed)
@@ -92,33 +102,23 @@ class OutOfCoreGNNTrainer:
         def op_sample(ctx):
             ctx["mb"] = self.sampler.sample(ctx["seeds"])
 
+        # the tier plan, the gathers, and the stats accounting all live in
+        # HeteroCache's split-phase API — the operators only phase it
         def op_io_submit(ctx):
             mb = ctx["mb"]
-            ids = mb.all_nodes
-            (dslot, ddest), (hslot, hdest), (sids, sdest) = self.cache.plan(ids)
-            ctx["plan"] = ((dslot, ddest), (hslot, hdest), (sids, sdest))
-            ctx["out"] = np.zeros((len(mb.nodes), self.store.row_dim),
-                                  self.store.dtype)
-            ctx["ticket"] = (self.io.submit(sids, ctx["out"], sdest)
-                             if len(sids) else None)
-            st = self.cache.stats
-            st.device_hits += len(dslot)
-            st.host_hits += len(hslot)
-            st.storage_misses += len(sids)
-            st.batches += 1
+            ctx["pending"] = self.cache.submit_planned(mb.all_nodes,
+                                                       n_rows=len(mb.nodes))
 
         def op_cache_lookup(ctx):
-            (dslot, ddest), (hslot, hdest), _ = ctx["plan"]
-            out = ctx["out"]
-            if len(hslot):
-                out[hdest] = self.cache.host_tier[hslot]
-            if len(dslot):
-                out[ddest] = np.asarray(
-                    jnp.take(self.cache.device_tier, jnp.asarray(dslot), axis=0))
+            self.cache.lookup_planned(ctx["pending"])
 
         def op_io_complete(ctx):
-            if ctx["ticket"] is not None:
-                ctx["ticket"].wait()
+            ctx["out"] = self.cache.complete_planned(ctx["pending"])
+
+        def op_cache_refresh(ctx):
+            # asynchronous tier migration on the io resource: placement
+            # updates hide under the device's batch_build/train work
+            ctx["refresh"] = self.cache.maybe_refresh()
 
         def op_batch_build(ctx):
             mb = ctx["mb"]
@@ -151,15 +151,19 @@ class OutOfCoreGNNTrainer:
             return edges * 16 / rate
 
         def vc_submit(ctx):
-            (_, _), (_, _), (sids, _) = ctx["plan"]
+            n_sto = ctx["pending"].n_storage
             return self.io.model.read_time(
-                len(sids), rb, DEFAULT_ENVELOPE.nvme_queue_depth) if len(sids) else 0.0
+                n_sto, rb, DEFAULT_ENVELOPE.nvme_queue_depth) if n_sto else 0.0
 
         def vc_lookup(ctx):
-            (dslot, _), (hslot, _), _ = ctx["plan"]
-            t_host = len(hslot) * rb / env.dram_bw + pcie_time(len(hslot) * rb)
-            t_dev = len(dslot) * rb / env.hbm_bw
+            pg = ctx["pending"]
+            t_host = pg.n_host * rb / env.dram_bw + pcie_time(pg.n_host * rb)
+            t_dev = pg.n_device * rb / env.hbm_bw
             return t_host + t_dev
+
+        def vc_refresh(ctx):
+            r = ctx.get("refresh")
+            return r.virtual_s if r is not None else 0.0
 
         def vc_h2d(ctx):
             # device-managed paths (Helios/GIDS) land storage + host rows in
@@ -186,6 +190,8 @@ class OutOfCoreGNNTrainer:
                      vc_lookup),
             Operator("io_complete", op_io_complete, "io", ("io_submit",),
                      lambda ctx: 1e-5),
+            Operator("cache_refresh", op_cache_refresh, "io",
+                     ("io_complete",), vc_refresh),
             Operator("batch_build", op_batch_build, "device",
                      ("cache_lookup", "io_complete"), vc_h2d),
             Operator("train", op_train, "device", ("batch_build",), vc_train),
@@ -212,6 +218,11 @@ class OutOfCoreGNNTrainer:
             "device_hits": self.cache.stats.device_hits,
             "host_hits": self.cache.stats.host_hits,
             "storage_misses": self.cache.stats.storage_misses,
+            "policy": self.cache.policy.name,
+            "refreshes": self.cache.stats.refreshes,
+            "promotions": self.cache.stats.promotions,
+            "demotions": self.cache.stats.demotions,
+            "virtual_migrate_s": self.cache.stats.virtual_migrate_s,
         }
         out["io"] = {"requests": self.io.stats.requests,
                      "bytes": self.io.stats.bytes,

@@ -84,3 +84,27 @@ class MicroBatcher:
         scatter = [np.searchsorted(uniq, mb.nodes) for mb in mbs]
         return MicroBatch(requests, mbs, uniq, scatter,
                           [len(r.seeds) for r in requests], per_request)
+
+    def gather(self, cache, micro: MicroBatch, dedup: bool = True):
+        """Fetch the micro-batch's features through the cache's split-phase
+        API — the same plan/gather/stats path the trainer pipelines.
+
+        With ``dedup`` the union id set is gathered exactly once and
+        per-request feature matrices are scattered back out of the unique
+        row block; the ablation path gathers per request.  Returns
+        ``(feats, n_device, n_host, n_storage, rows_fetched)`` so the
+        server can do virtual-time and dedup accounting.
+        """
+        if dedup:
+            pending = cache.submit_planned(micro.unique_ids)
+            rows = cache.complete_planned(pending)
+            return ([rows[sc] for sc in micro.scatter], pending.n_device,
+                    pending.n_host, pending.n_storage, len(micro.unique_ids))
+        feats, n_dev, n_host, n_sto = [], 0, 0, 0
+        for mb in micro.minibatches:
+            pending = cache.submit_planned(mb.nodes)
+            feats.append(cache.complete_planned(pending))
+            n_dev += pending.n_device
+            n_host += pending.n_host
+            n_sto += pending.n_storage
+        return feats, n_dev, n_host, n_sto, micro.rows_requested

@@ -26,6 +26,7 @@ import numpy as np
 from repro.core import hotness as hotness_mod
 from repro.core.hetero_cache import HeteroCache, tier_rows
 from repro.core.iostack import FeatureStore, make_engine
+from repro.core.policy import make_policy
 from repro.core.simulator import (DEFAULT_ENVELOPE, HOST_STAGE_BW,
                                   MATMUL_RATE, SAMPLE_RATE_CPU,
                                   SAMPLE_RATE_DEVICE, VirtualClock,
@@ -52,6 +53,12 @@ class ServerConfig:
     host_cache_frac: float = 0.10
     io_worker_budget: float = 0.3
     presample_batches: int = 4
+    cache_policy: str = "static"       # static | online (core.policy):
+                                       # online re-derives placement from
+                                       # the live access stream
+    refresh_every: int = 8             # micro-batches between refresh checks
+    policy_half_life: float = 16.0
+    policy_hysteresis: float = 0.1
     batch_window_v: float = 1e-3       # micro-batch time window (virtual s)
     max_batch_requests: int = 8        # micro-batch size window
     seed: int = 0
@@ -82,7 +89,15 @@ class GNNInferenceServer:
         dev_rows, host_rows = tier_rows(cfg.mode, graph.n_vertices,
                                         cfg.device_cache_frac,
                                         cfg.host_cache_frac)
-        self.cache = HeteroCache(store, hot, dev_rows, host_rows, self.io)
+        # the unified gather path feeds every served access into the
+        # policy, so cache_policy="online" re-derives placement from the
+        # live (e.g. Zipf) request stream instead of the presample epoch
+        policy = make_policy(cfg.cache_policy, graph.n_vertices,
+                             presample=hot, refresh_every=cfg.refresh_every,
+                             half_life=cfg.policy_half_life,
+                             hysteresis=cfg.policy_hysteresis)
+        self.cache = HeteroCache(store, None, dev_rows, host_rows, self.io,
+                                 policy=policy)
 
         # --- model + single compiled forward step ------------------------
         if params is None:
@@ -157,27 +172,13 @@ class GNNInferenceServer:
         rb = self.store.row_bytes
         loc = self.cache.loc
 
-        # --- one deduplicated gather (or per-request, for the ablation) --
+        # --- one deduplicated gather (or per-request, for the ablation)
+        # through the cache's split-phase API, same path as the trainer --
         io_v0 = self.io.stats.virtual_io_s
         naive_storage = sum(int((loc[u] == 2).sum())
                             for u in micro.unique_per_request)
-        if cfg.dedup:
-            plan = self.cache.plan(micro.unique_ids)
-            rows = self.cache.gather_planned(micro.unique_ids, plan)
-            feats = [rows[sc] for sc in micro.scatter]
-            n_dev = len(plan[0][0])
-            n_host = len(plan[1][0])
-            issued_storage = len(plan[2][0])
-            rows_fetched = len(micro.unique_ids)
-        else:
-            feats, n_dev, n_host, issued_storage = [], 0, 0, 0
-            for mb in micro.minibatches:
-                p = self.cache.plan(mb.nodes)
-                feats.append(self.cache.gather_planned(mb.nodes, p))
-                n_dev += len(p[0][0])
-                n_host += len(p[1][0])
-                issued_storage += len(p[2][0])
-            rows_fetched = micro.rows_requested
+        feats, n_dev, n_host, issued_storage, rows_fetched = \
+            self.batcher.gather(self.cache, micro, cfg.dedup)
         t_storage = self.io.stats.virtual_io_s - io_v0
 
         # --- forward pass per request (shared compiled step) -------------
@@ -214,11 +215,19 @@ class GNNInferenceServer:
                                        max(t_storage, t_host + t_dev))
             end_v = self.clock.schedule("device", e_io, t_h2d + t_fwd)
         else:
-            end_v = self.clock.schedule(
+            e_io = end_v = self.clock.schedule(
                 "serial", start_v,
                 t_sample + t_storage + t_host + t_dev + t_h2d + t_fwd)
 
         self.scheduler.observe_service(end_v - start_v)
+
+        # asynchronous tier migration: the policy re-derives placement from
+        # the served access stream; migration rides the io resource so it
+        # hides under this batch's device compute (serial modes pay it)
+        refresh = self.cache.maybe_refresh()
+        if refresh is not None and refresh.virtual_s:
+            self.clock.schedule("io" if self._pipelined else "serial",
+                                e_io, refresh.virtual_s)
 
         # --- complete futures + metrics ----------------------------------
         st = self.stats

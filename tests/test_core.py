@@ -276,6 +276,17 @@ def test_presample_stream_decorrelated_from_trainer_batches():
     assert not np.array_equal(spy.seen[0], train_batch)
 
 
+def test_drain_waits_for_inflight_completion(store):
+    """drain() uses join()/task_done() semantics: it must not return while
+    a worker is still mid-read on the last popped item, so every ticket
+    submitted before the drain has resolved when it returns."""
+    eng = AsyncIOEngine(store, worker_budget=1.0)
+    tickets = [eng.submit(np.arange(2048)) for _ in range(12)]
+    eng.drain()
+    assert all(tk.future.done() for tk in tickets)
+    eng.close()
+
+
 def test_async_engine_close_resolves_queued_tickets(store):
     """close() drains before stopping: every ticket submitted before the
     close resolves instead of stranding its waiter."""

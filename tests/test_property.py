@@ -90,6 +90,53 @@ def test_hlo_op_line_tuple_type():
     assert _shape_bytes(_parse_shapes(type_str)) == 4 + 12 + 16
 
 
+_PROP_STORE = None
+
+
+def _prop_store():
+    """Tiny feature store shared across hypothesis examples (built once)."""
+    global _PROP_STORE
+    if _PROP_STORE is None:
+        import tempfile
+        from repro.core.iostack import FeatureStore
+        _PROP_STORE = FeatureStore(tempfile.mkdtemp(prefix="prop_cache_"),
+                                   n_rows=96, row_dim=4, n_shards=3,
+                                   create=True, rng_seed=1)
+    return _PROP_STORE
+
+
+@given(seqs=st.lists(hnp.arrays(np.float64, st.just(96),
+                                elements=st.floats(0, 100, width=64)),
+                     min_size=1, max_size=4),
+       tiers=st.tuples(st.integers(0, 40), st.integers(0, 40)))
+@settings(**SET)
+def test_cache_refresh_invariants(seqs, tiers):
+    """After ANY sequence of refresh() calls: every node id maps to exactly
+    one tier, slot tables stay dense/consistent, and a full gather still
+    matches FeatureStore.read_rows."""
+    from repro.core.hetero_cache import HeteroCache
+    from repro.core.iostack import SyncIOEngine
+    store = _prop_store()
+    dev, host = tiers
+    cache = HeteroCache(store, np.zeros(96), dev, host,
+                        io_engine=SyncIOEngine(store))
+    all_ids = np.arange(96)
+    ref = store.read_rows(all_ids)
+    for scores in seqs:
+        cache.refresh(scores)
+        loc, slot = cache.loc, cache.slot
+        assert (loc == 0).sum() == dev and (loc == 1).sum() == host
+        for tier, rows in ((0, dev), (1, host)):
+            np.testing.assert_array_equal(np.sort(slot[loc == tier]),
+                                          np.arange(rows))
+        np.testing.assert_array_equal(np.sort(cache._dev_ids),
+                                      np.where(loc == 0)[0])
+        np.testing.assert_array_equal(np.sort(cache._host_ids),
+                                      np.where(loc == 1)[0])
+        np.testing.assert_allclose(cache.gather(all_ids), ref, rtol=1e-6)
+    cache.close()
+
+
 @given(hnp.arrays(np.float32, st.integers(2, 200),
                   elements=st.floats(-1, 1, width=32)))
 @settings(**SET)
