@@ -25,6 +25,9 @@ ROOT = tempfile.mkdtemp(prefix="helios_bench_")
 N_V = 20000
 N_BATCHES = 6
 ROWS = []
+# smoke mode (CI): shrink the expensive sweeps so the suite stays in PR
+# budget while still exercising every code path and acceptance ratio
+SMOKE = bool(int(os.environ.get("HELIOS_BENCH_SMOKE", "0")))
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -42,11 +45,12 @@ def _graph(skew=1.2):
     return synth_graph(N_V, 8, skew=skew, seed=0)
 
 
-def _run(graph, store, mode, **kw):
+def _run(graph, store, mode, n_batches=N_BATCHES, **kw):
+    kw.setdefault("presample_batches", 3)
     cfg = TrainerConfig(mode=mode, batch_size=512, fanouts=(10, 5), hidden=128,
-                        presample_batches=3, **kw)
+                        **kw)
     with OutOfCoreGNNTrainer(graph, store, cfg) as tr:
-        out = tr.train(N_BATCHES)
+        out = tr.train(n_batches)
     return out
 
 
@@ -260,6 +264,113 @@ def cache_policy():
              f"oracle_bound_ok={int(hit['oracle'] >= hit['online'] >= hit['static'])}")
 
 
+def io_path():
+    """IO path: shard-striped SQs, range-coalesced reads, policy prefetch.
+
+    (a) Engine read path on Zipf-skewed gather batches: the legacy
+        single-queue path (PR-2: one shared SQ, whole-batch serial read,
+        4K-random cost) vs per-shard striped SQs vs striped + range
+        coalescing, across skews and coalesce gaps.  Acceptance: the
+        striped+coalesced AsyncIOEngine reaches >= 2x the legacy path's
+        effective storage bandwidth (virtual time) on the skewed workload.
+    (b) Policy-driven prefetch: cold storage misses with/without the
+        prefetch operator, trainer AND server, on the online policy with
+        refresh disabled so the reduction is attributable to prefetch.
+    (c) Engine-mode ordering: helios < gids < cpu virtual time per batch
+        still holds on the new read path (paper Fig. 5 ordering).
+    """
+    # the engine sweep keeps full-size batches even in smoke mode: the >=2x
+    # acceptance ratio needs realistic per-shard run density, and raw engine
+    # submits are cheap — only the trainer/server legs shrink
+    n_req = 32768
+    n_b = 2 if SMOKE else 4
+    store = _store(128, tag="iop")
+    rng = np.random.default_rng(0)
+
+    # --- (a) engine sweep ------------------------------------------------
+    for skew in ((1.2,) if SMOKE else (0.8, 1.2)):
+        p = 1.0 / (np.arange(N_V) + 1.0) ** skew
+        p /= p.sum()
+        batches = [np.unique(rng.choice(N_V, size=n_req, p=p))
+                   for _ in range(n_b)]
+        base_bw = None
+        for label, kw in (("legacy-1q", dict(striped=False)),
+                          ("striped-gap0", dict(striped=True,
+                                                coalesce_gap=0)),
+                          ("striped-gap8", dict(striped=True,
+                                                coalesce_gap=8))):
+            eng = AsyncIOEngine(store, worker_budget=0.3, **kw)
+            for b in batches:
+                eng.submit(b).wait()
+            bw = eng.stats.bw()
+            if base_bw is None:
+                base_bw = bw
+            amp = eng.stats.span_bytes / max(eng.stats.bytes, 1)
+            emit(f"io_path/skew{skew}/{label}",
+                 eng.stats.virtual_io_s * 1e6 / n_b,
+                 f"GBps={bw / 1e9:.2f};x_vs_legacy={bw / base_bw:.2f};"
+                 f"ranges={eng.stats.ranges};read_amp={amp:.2f}")
+            eng.close()
+
+    # --- (b) prefetch: trainer then server -------------------------------
+    g = _graph(skew=1.2)
+    n_train = 8 if SMOKE else 12
+    miss = {}
+    # serial operators (helios-nopipe) for the TRAINER leg: under the deep
+    # pipeline a prefetch races wall-clock against the next batch's tier
+    # plan, making the miss count scheduler-dependent — the serial plan
+    # keeps the same operator wiring but is bit-deterministic, which the
+    # CI gate asserting strict reduction requires
+    for pf in (0, 512):
+        out = _run(g, store, "helios-nopipe", n_batches=n_train,
+                   cache_policy="online", refresh_every=10**6,
+                   prefetch_rows=pf, device_cache_frac=0.05,
+                   host_cache_frac=0.10, presample_batches=2)
+        miss[pf] = out["cache"]["storage_misses"]
+        emit(f"io_path/prefetch/trainer-pf{pf}",
+             out["virtual_per_batch_s"] * 1e6,
+             f"storage_misses={miss[pf]};hit_rate="
+             f"{out['cache']['hit_rate']:.3f};"
+             f"prefetched={out['cache']['prefetched_rows']}")
+    emit("io_path/prefetch/trainer-summary", 0.0,
+         f"miss_reduction={1 - miss[512] / max(miss[0], 1):.3f};"
+         f"reduced_ok={int(miss[512] < miss[0])}")
+
+    from repro.serving import GNNInferenceServer, ServerConfig, zipf_workload
+    wl = zipf_workload(g.n_vertices, 24 if SMOKE else 48, 32, rate_rps=6e4,
+                       degrees=g.degrees(), seed=1)
+    miss = {}
+    for pf in (0, 512):
+        cfg = ServerConfig(mode="helios", request_batch_size=32,
+                           fanouts=(8, 4), hidden=128,
+                           device_cache_frac=0.01, host_cache_frac=0.04,
+                           presample_batches=2, max_batch_requests=8,
+                           cache_policy="online", refresh_every=10**6,
+                           prefetch_rows=pf, seed=0)
+        with GNNInferenceServer(g, store, cfg) as srv:
+            for seeds, arrival, klass in wl:
+                srv.submit(seeds, klass, arrival)
+            st = srv.flush()
+            cs = srv.cache.stats
+            miss[pf] = cs.storage_misses
+            emit(f"io_path/prefetch/server-pf{pf}",
+                 st.percentile(50) * 1e6,
+                 f"storage_misses={cs.storage_misses};"
+                 f"hit_rate={cs.hit_rate:.3f};rps={st.throughput_rps():.0f}")
+    emit("io_path/prefetch/server-summary", 0.0,
+         f"miss_reduction={1 - miss[512] / max(miss[0], 1):.3f};"
+         f"reduced_ok={int(miss[512] < miss[0])}")
+
+    # --- (c) engine-mode ordering on the new path ------------------------
+    t = {}
+    for mode in ("helios", "gids", "cpu"):
+        t[mode] = _run(g, store, mode)["virtual_per_batch_s"]
+        emit(f"io_path/modes/{mode}", t[mode] * 1e6,
+             f"x_vs_helios={t['helios'] / t[mode]:.3f}")
+    emit("io_path/modes/summary", 0.0,
+         f"ordering_ok={int(t['helios'] < t['gids'] < t['cpu'])}")
+
+
 def table1_datasets():
     """Table 1 sanity: registered dataset characteristics."""
     for name, d in DATASETS.items():
@@ -270,4 +381,4 @@ def table1_datasets():
 
 ALL = [table1_datasets, fig7_iostack, fig5_end_to_end, fig6_inmem,
        fig8_cpu_cache_ssds, fig9_cpu_cache_dims, fig10_gpu_cache,
-       fig11_pipeline, serve_slo, cache_policy]
+       fig11_pipeline, serve_slo, cache_policy, io_path]

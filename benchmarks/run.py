@@ -4,8 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows.  Run all:
 
     PYTHONPATH=src python -m benchmarks.run
     PYTHONPATH=src python -m benchmarks.run --only fig7,fig11
+    PYTHONPATH=src python -m benchmarks.run --only io_path --smoke --json out.json
 """
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -17,7 +20,16 @@ def main() -> None:
                          "fig7,serve")
     ap.add_argument("--list", action="store_true",
                     help="list available figures and exit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink the expensive sweeps (CI per-PR budget); "
+                         "every code path and acceptance ratio still runs")
+    ap.add_argument("--json", default="",
+                    help="also dump the emitted rows to this JSON file "
+                         "(CI uploads it as the perf-regression artifact)")
     args = ap.parse_args()
+    if args.smoke:
+        # figs reads the env var at import time, so set it before importing
+        os.environ["HELIOS_BENCH_SMOKE"] = "1"
     from benchmarks import figs
     if args.list:
         for fn in figs.ALL:
@@ -31,7 +43,15 @@ def main() -> None:
         if sel and not any(fn.__name__.startswith(s) for s in sel):
             continue
         fn()
-    print(f"# total wall {time.time() - t0:.1f}s", file=sys.stderr)
+    wall = time.time() - t0
+    print(f"# total wall {wall:.1f}s", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"smoke": args.smoke, "wall_s": wall,
+                       "rows": [{"name": n, "us_per_call": u, "derived": d}
+                                for n, u, d in figs.ROWS]}, fh, indent=1)
+        print(f"# wrote {len(figs.ROWS)} rows to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == '__main__':

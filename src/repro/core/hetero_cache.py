@@ -59,6 +59,10 @@ class CacheStats:
     demotions: int = 0                  # rows moved to a slower tier
     migrated_bytes: int = 0
     virtual_migrate_s: float = 0.0
+    # policy-driven prefetch accounting (maybe_prefetch())
+    prefetches: int = 0
+    prefetched_rows: int = 0
+    virtual_prefetch_s: float = 0.0
 
     @property
     def hit_rate(self):
@@ -82,6 +86,14 @@ class RefreshResult:
     virtual_s: float = 0.0
 
 
+@dataclass
+class PrefetchResult:
+    """One ``maybe_prefetch()``: predicted-hot rows pulled ahead of use."""
+    rows: int = 0
+    tier: str = ""                      # "host" | "device"
+    virtual_s: float = 0.0
+
+
 class PendingGather:
     """In-flight split-phase gather: tier plan + table/tier snapshot.
 
@@ -91,7 +103,7 @@ class PendingGather:
     """
 
     __slots__ = ("ids", "plan", "out", "ticket", "device_tier", "host_tier",
-                 "t0", "done", "_looked", "_dev_rows", "_lk")
+                 "t0", "done", "storage_virt", "_looked", "_dev_rows", "_lk")
 
     def __init__(self, ids, plan, out, ticket, device_tier, host_tier):
         self.ids = ids
@@ -102,6 +114,7 @@ class PendingGather:
         self.host_tier = host_tier
         self.t0 = time.perf_counter()
         self.done = False
+        self.storage_virt = 0.0         # virtual s the ticket resolved with
         self._looked = False
         self._dev_rows = None
         self._lk = threading.Lock()
@@ -226,13 +239,15 @@ class HeteroCache:
         """Phase 3: wait out the storage ticket, land the device rows,
         account stats ONCE, and feed the access stream to the policy."""
         self.lookup_planned(pg)
+        virt_sto = 0.0
         if pg.ticket is not None:
-            pg.ticket.wait()
+            _, virt_sto = pg.ticket.wait()
         with pg._lk:
             if pg.done:
                 return pg.out
             if pg._dev_rows is not None:
                 pg.out[pg.plan[0][1]] = np.asarray(pg._dev_rows)
+            pg.storage_virt = virt_sto
             pg.done = True
 
         rb = self.store.row_bytes
@@ -245,9 +260,13 @@ class HeteroCache:
             st.virtual_device_s += hbm_gather_time(n_dev * rb, self.env)
             st.virtual_host_s += (dram_gather_time(n_host * rb, self.env)
                                   + pcie_time(n_host * rb, self.env))
-            if n_sto:
-                st.virtual_storage_s += self.io.model.read_time(
-                    n_sto, rb, self.env.nvme_queue_depth)
+            # the virtual seconds the ticket actually resolved with — NOT a
+            # recompute of ArrayModel.read_time at full queue depth — so
+            # cache stats agree with engine stats in every mode: the async
+            # engine's striped/coalesced time, the sync engine's collapsed
+            # queue depth, and the CPU engine's staging overhead all land
+            # here unchanged
+            st.virtual_storage_s += virt_sto
             st.wall_s += time.perf_counter() - pg.t0
             st.batches += 1
         self.policy.record(pg.ids)
@@ -292,7 +311,6 @@ class HeteroCache:
             rb = self.store.row_bytes
             res = RefreshResult(device_in=len(dev_in), host_in=len(host_in))
             if len(dev_in) or len(host_in):
-                tickets = []
                 # admissions to HBM: promote from DRAM when resident there,
                 # otherwise pull through the storage stack
                 dev_buf = np.empty((len(dev_in), self.store.row_dim),
@@ -302,11 +320,7 @@ class HeteroCache:
                     dev_buf[from_host] = \
                         self.host_tier[old_slot[dev_in[from_host]]]
                 miss = np.where(~from_host)[0]
-                if len(miss):
-                    tickets.append(self.io.submit(dev_in[miss], dev_buf,
-                                                  miss, tag="refresh"))
-                # admissions to DRAM: demotions copy back from HBM,
-                # storage promotions ride a second ticket
+                # admissions to DRAM: demotions copy back from HBM
                 host_buf = np.empty((len(host_in), self.store.row_dim),
                                     self.store.dtype)
                 from_dev = old_loc[host_in] == 0
@@ -315,11 +329,21 @@ class HeteroCache:
                         self.device_tier,
                         jnp.asarray(old_slot[host_in[from_dev]]), axis=0))
                 miss_h = np.where(~from_dev)[0]
-                if len(miss_h):
-                    tickets.append(self.io.submit(host_in[miss_h], host_buf,
-                                                  miss_h, tag="refresh"))
-                for tk in tickets:
-                    tk.wait()
+                # every storage-tier admission — both destinations — rides
+                # ONE ticket: the striped engine splits it by shard and
+                # coalesces each shard's offsets into sequential ranges, so
+                # migration IO rides those ranges even when adjacent rows
+                # split between the device and host tiers (two tickets
+                # would break the runs at the tier boundary)
+                adm_ids = np.concatenate([dev_in[miss], host_in[miss_h]])
+                virt_adm = 0.0
+                if len(adm_ids):
+                    adm_buf = np.empty((len(adm_ids), self.store.row_dim),
+                                       self.store.dtype)
+                    _, virt_adm = self.io.submit(adm_ids, adm_buf,
+                                                 tag="refresh").wait()
+                    dev_buf[miss] = adm_buf[:len(miss)]
+                    host_buf[miss_h] = adm_buf[len(miss):]
 
                 # copy-on-refresh: build NEW tables/tiers, swap atomically
                 new_dev_ids = cur_dev.copy()
@@ -337,13 +361,12 @@ class HeteroCache:
                 loc, slot = tables_from_sets(self.store.n_rows, new_dev_ids,
                                              new_host_ids)
 
-                n_sto_in = len(dev_in) - int(from_host.sum()) \
-                    + len(host_in) - int(from_dev.sum())
+                # tier-to-tier copies cross PCIe; storage admissions cost
+                # what their ticket actually resolved with (ticket-resolved
+                # time, same accounting rule as complete_planned)
                 virt = pcie_time((int(from_host.sum())
                                   + int(from_dev.sum())) * rb, self.env)
-                if n_sto_in:
-                    virt += self.io.model.read_time(
-                        n_sto_in, rb, self.env.nvme_queue_depth)
+                virt += virt_adm
                 res.promotions = int((loc < old_loc).sum())
                 res.demotions = int((loc > old_loc).sum())
                 res.moved_bytes = (len(dev_in) + len(host_in)) * rb
@@ -382,6 +405,95 @@ class HeteroCache:
             res = self.refresh(scores)
             pol.refreshed()
         return res
+
+    # ------------------------------------------------------------------
+    # policy-driven prefetch: hide the FIRST miss, not just steady state
+    # ------------------------------------------------------------------
+    def maybe_prefetch(self, k: int | None = None) -> PrefetchResult | None:
+        """Ask the policy for predicted-hot storage rows (rising score
+        trend) and pull them into the cache BEFORE they are requested.
+        ``refresh()`` fixes steady-state placement; prefetch hides the cold
+        first miss the steady state can never see.  Scheduled as the
+        ``prefetch`` pipeline operator on the io resource so the pull hides
+        under device compute."""
+        fn = getattr(self.policy, "prefetch_candidates", None)
+        if fn is None:
+            return None
+        if k is None:
+            k = max(1, (self.host_rows or self.device_rows) // 8)
+        with self._refresh_lock:
+            cand = fn(self.loc, k)
+            if cand is None or not len(cand):
+                return None
+            return self.prefetch_rows(cand)
+
+    def prefetch_rows(self, ids: np.ndarray) -> PrefetchResult | None:
+        """Admit ``ids`` (storage-resident, ranked hottest-first) into the
+        fastest tier with capacity — host DRAM when present, else device —
+        evicting the coldest current residents.  The admission read is one
+        batched ticket, so the striped engine coalesces it into sequential
+        per-shard ranges like refresh migration."""
+        import jax.numpy as jnp
+        with self._refresh_lock:
+            ids = np.asarray(ids)
+            ids = ids[self.loc[ids] == 2]           # storage-resident only
+            _, first = np.unique(ids, return_index=True)
+            ids = ids[np.sort(first)]               # dedupe, keep ranking
+            tier = ("host" if self.host_rows
+                    else ("device" if self.device_rows else None))
+            if tier is None or not len(ids):
+                return None
+            cap = self.host_rows if tier == "host" else self.device_rows
+            ids = ids[:min(len(ids), cap)]          # caller ranked by trend
+            cur = self._host_ids if tier == "host" else self._dev_ids
+            scores = self.policy.placement_scores(self.loc)
+            if scores is None:
+                victims = np.arange(len(cur) - len(ids), len(cur))
+            else:
+                # pair hottest candidates against coldest residents and
+                # admit only where the newcomer OUTSCORES the incumbent
+                # (refresh's admission criterion, applied early to the
+                # trend-flagged rows; hysteresis boosts the residents) — a
+                # marginally-rising cold row must never evict a genuinely
+                # hot resident and manufacture future misses
+                s = np.asarray(scores)
+                ids = ids[np.argsort(-s[ids], kind="stable")]
+                vict = np.argsort(s[cur], kind="stable")[:len(ids)]
+                win = s[ids] > s[cur[vict]]
+                ids, victims = ids[win], vict[win]
+                if not len(ids):
+                    return None
+            k = len(ids)
+            buf = np.empty((k, self.store.row_dim), self.store.dtype)
+            _, virt = self.io.submit(ids, buf, tag="prefetch").wait()
+            # copy-on-prefetch, same snapshot discipline as refresh(): new
+            # tables/tier arrays built aside, swapped atomically
+            new_ids = cur.copy()
+            new_ids[victims] = ids
+            if tier == "host":
+                tier_arr = self.host_tier.copy()
+                tier_arr[victims] = buf
+                loc, slot = tables_from_sets(self.store.n_rows,
+                                             self._dev_ids, new_ids)
+                with self._table_lock:
+                    self.loc, self.slot = loc, slot
+                    self.host_tier = tier_arr
+                    self._host_ids = new_ids
+            else:
+                tier_arr = self.device_tier.at[jnp.asarray(victims)].set(
+                    jnp.asarray(buf))
+                loc, slot = tables_from_sets(self.store.n_rows, new_ids,
+                                             self._host_ids)
+                with self._table_lock:
+                    self.loc, self.slot = loc, slot
+                    self.device_tier = tier_arr
+                    self._dev_ids = new_ids
+            with self._stats_lock:
+                st = self.stats
+                st.prefetches += 1
+                st.prefetched_rows += k
+                st.virtual_prefetch_s += virt
+            return PrefetchResult(k, tier, virt)
 
     # ------------------------------------------------------------------
     def close(self):

@@ -12,6 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.policy import placement  # noqa: F401  (compat re-export)
+from repro.core.rng import draw_unique
 
 
 def presample_gnn(sampler, seeds_per_batch: int, n_batches: int,
@@ -25,9 +26,9 @@ def presample_gnn(sampler, seeds_per_batch: int, n_batches: int,
     counts = np.zeros(n_rows, np.int64)
     for _ in range(n_batches):
         # unique seeds, matching the trainer's draw and the sampler's
-        # documented without-replacement contract
-        seeds = rng.choice(n_rows, size=min(seeds_per_batch, n_rows),
-                           replace=False)
+        # documented without-replacement contract; bounded-cost draw so the
+        # presample epoch stays O(batch) at terabyte-scale vertex counts
+        seeds = draw_unique(rng, n_rows, min(seeds_per_batch, n_rows))
         batch = sampler.sample(seeds)
         ids, c = np.unique(batch.all_nodes, return_counts=True)
         np.add.at(counts, ids, c)

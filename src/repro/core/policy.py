@@ -78,6 +78,13 @@ class CachePolicy(Protocol):
         """Notification that the cache applied a refresh."""
         ...
 
+    def prefetch_candidates(self, loc: np.ndarray, k: int) -> np.ndarray:
+        """Up to ``k`` storage-resident row ids predicted to turn hot,
+        ranked hottest-first — the cache pulls these BEFORE they are
+        requested (``HeteroCache.maybe_prefetch``).  Empty = nothing to
+        prefetch."""
+        ...
+
 
 class StaticPresamplePolicy:
     """Frozen pre-sampling placement — the original cache behavior."""
@@ -101,6 +108,9 @@ class StaticPresamplePolicy:
 
     def refreshed(self) -> None:
         pass
+
+    def prefetch_candidates(self, loc: np.ndarray, k: int) -> np.ndarray:
+        return np.empty(0, np.int64)    # frozen scores predict no movers
 
 
 class OnlineDecayPolicy:
@@ -130,6 +140,9 @@ class OnlineDecayPolicy:
         self.refresh_every = refresh_every
         self.hysteresis = hysteresis
         self._since_refresh = 0
+        # score snapshot at the last prefetch check: the delta against it is
+        # the score TREND that predicts rows turning hot
+        self._trend_ref = self._scores.copy()
         self._lock = threading.Lock()
 
     def initial_scores(self) -> np.ndarray:
@@ -154,6 +167,21 @@ class OnlineDecayPolicy:
     def refreshed(self) -> None:
         with self._lock:
             self._since_refresh = 0
+
+    def prefetch_candidates(self, loc: np.ndarray, k: int) -> np.ndarray:
+        """Storage-resident rows whose decayed-count score ROSE since the
+        last prefetch check, hottest trend first.  A rising EWMA flags a row
+        turning hot while its absolute score is still below the cached
+        incumbents — prefetching it hides the cold misses it would take to
+        climb the ranking by itself (untouched rows only decay, so they
+        never qualify)."""
+        with self._lock:
+            delta = self._scores - self._trend_ref
+            self._trend_ref = self._scores.copy()
+        cand = np.where((delta > 0) & (loc == 2))[0]
+        if not len(cand):
+            return cand
+        return cand[np.argsort(-delta[cand], kind="stable")[:k]]
 
 
 class OracleOfflinePolicy:
@@ -199,6 +227,16 @@ class OracleOfflinePolicy:
     def refreshed(self) -> None:
         with self._lock:
             self._due = False
+
+    def prefetch_candidates(self, loc: np.ndarray, k: int) -> np.ndarray:
+        """Exact upcoming-window knowledge: the storage rows the next
+        ``window`` batches will touch, hottest first — the upper bound no
+        trend heuristic can beat."""
+        counts = self._window_counts(self._cursor)
+        cand = np.where((counts > 0) & (loc == 2))[0]
+        if not len(cand):
+            return cand
+        return cand[np.argsort(-counts[cand], kind="stable")[:k]]
 
 
 def make_policy(kind: str, n_rows: int,

@@ -10,6 +10,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.rng import draw_unique  # noqa: F401  (seed-draw re-export)
 from repro.gnn.graph import CSRGraph
 
 

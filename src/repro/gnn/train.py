@@ -33,7 +33,7 @@ from repro.core.simulator import (DEFAULT_ENVELOPE, HOST_STAGE_BW,
                                   SAMPLE_RATE_DEVICE, pcie_time)
 from repro.gnn.graph import CSRGraph
 from repro.gnn.models import init_gnn_params, make_gnn_train_step
-from repro.gnn.sampling import NeighborSampler
+from repro.gnn.sampling import NeighborSampler, draw_unique
 from repro.train.optim import adamw
 
 
@@ -51,6 +51,8 @@ class TrainerConfig:
     presample_batches: int = 8
     cache_policy: str = "static"   # static | online (core.policy)
     refresh_every: int = 8         # batches between refresh checks (online)
+    prefetch_rows: int = 0         # predicted-hot rows pulled per batch by
+                                   # the prefetch operator (0 = disabled)
     policy_half_life: float = 16.0
     policy_hysteresis: float = 0.1
     lr: float = 1e-3
@@ -91,7 +93,6 @@ class OutOfCoreGNNTrainer:
         self.opt = adamw(cfg.lr)
         self.state = {"params": self.params, "opt": self.opt.init(self.params)}
         self.step_fn = make_gnn_train_step(cfg.model, self.opt, cfg.batch_size)
-        self.rng = np.random.default_rng(cfg.seed)
         self.metrics_log = []
 
     # -----------------------------------------------------------------
@@ -119,6 +120,12 @@ class OutOfCoreGNNTrainer:
             # asynchronous tier migration on the io resource: placement
             # updates hide under the device's batch_build/train work
             ctx["refresh"] = self.cache.maybe_refresh()
+
+        def op_prefetch(ctx):
+            # policy-driven prefetch on the io resource: rows the score
+            # trend predicts will turn hot are pulled into the cache before
+            # any batch requests them (hide the first miss)
+            ctx["prefetch"] = self.cache.maybe_prefetch(cfg.prefetch_rows)
 
         def op_batch_build(ctx):
             mb = ctx["mb"]
@@ -151,9 +158,15 @@ class OutOfCoreGNNTrainer:
             return edges * 16 / rate
 
         def vc_submit(ctx):
-            n_sto = ctx["pending"].n_storage
-            return self.io.model.read_time(
-                n_sto, rb, DEFAULT_ENVELOPE.nvme_queue_depth) if n_sto else 0.0
+            # decoupled submission only BUILDS per-shard SQE batches — the
+            # storage service time is charged where the ticket resolves
+            # (vc_complete), with the virtual seconds the engine actually
+            # accounted for the striped/coalesced read
+            tk = ctx["pending"].ticket
+            return 2e-6 * (tk.shards if tk is not None else 0)
+
+        def vc_complete(ctx):
+            return ctx["pending"].storage_virt
 
         def vc_lookup(ctx):
             pg = ctx["pending"]
@@ -163,6 +176,10 @@ class OutOfCoreGNNTrainer:
 
         def vc_refresh(ctx):
             r = ctx.get("refresh")
+            return r.virtual_s if r is not None else 0.0
+
+        def vc_prefetch(ctx):
+            r = ctx.get("prefetch")
             return r.virtual_s if r is not None else 0.0
 
         def vc_h2d(ctx):
@@ -183,19 +200,23 @@ class OutOfCoreGNNTrainer:
             flops = 4 * edges * self.store.row_dim * self.cfg.hidden
             return flops / MATMUL_RATE
 
-        return [
+        plan = [
             Operator("sample", op_sample, "host", (), vc_sample),
             Operator("io_submit", op_io_submit, "io", ("sample",), vc_submit),
             Operator("cache_lookup", op_cache_lookup, "host", ("io_submit",),
                      vc_lookup),
             Operator("io_complete", op_io_complete, "io", ("io_submit",),
-                     lambda ctx: 1e-5),
+                     vc_complete),
             Operator("cache_refresh", op_cache_refresh, "io",
                      ("io_complete",), vc_refresh),
             Operator("batch_build", op_batch_build, "device",
                      ("cache_lookup", "io_complete"), vc_h2d),
             Operator("train", op_train, "device", ("batch_build",), vc_train),
         ]
+        if cfg.prefetch_rows > 0:
+            plan.insert(5, Operator("prefetch", op_prefetch, "io",
+                                    ("io_complete",), vc_prefetch))
+        return plan
 
     # -----------------------------------------------------------------
     def train(self, n_batches: int) -> dict:
@@ -207,8 +228,14 @@ class OutOfCoreGNNTrainer:
                                 prefetch_depth=cfg.prefetch_depth)
 
         def make_ctx(i):
-            seeds = self.rng.choice(self.g.n_vertices,
-                                    size=cfg.batch_size, replace=False)
+            # bounded-cost unique draw: O(batch) expected, not O(n_vertices).
+            # The rng is derived from the BATCH INDEX, not a shared stream:
+            # deep-pipeline mode calls make_ctx from concurrent pipe-batch
+            # threads, and a shared Generator is neither thread-safe nor
+            # deterministic under interleaving — per-index derivation makes
+            # the seed stream reproducible in every pipeline mode
+            rng = np.random.default_rng([cfg.seed, 0x5EED, i])
+            seeds = draw_unique(rng, self.g.n_vertices, cfg.batch_size)
             return {"seeds": seeds}
 
         out = pipe.run(make_ctx, n_batches)
@@ -223,10 +250,15 @@ class OutOfCoreGNNTrainer:
             "promotions": self.cache.stats.promotions,
             "demotions": self.cache.stats.demotions,
             "virtual_migrate_s": self.cache.stats.virtual_migrate_s,
+            "prefetches": self.cache.stats.prefetches,
+            "prefetched_rows": self.cache.stats.prefetched_rows,
+            "virtual_prefetch_s": self.cache.stats.virtual_prefetch_s,
         }
         out["io"] = {"requests": self.io.stats.requests,
                      "bytes": self.io.stats.bytes,
-                     "virtual_s": self.io.stats.virtual_io_s}
+                     "virtual_s": self.io.stats.virtual_io_s,
+                     "ranges": self.io.stats.ranges,
+                     "span_bytes": self.io.stats.span_bytes}
         out["loss_first"] = self.metrics_log[0]["loss"] if self.metrics_log else None
         out["loss_last"] = self.metrics_log[-1]["loss"] if self.metrics_log else None
         return out

@@ -57,6 +57,8 @@ class ServerConfig:
                                        # online re-derives placement from
                                        # the live access stream
     refresh_every: int = 8             # micro-batches between refresh checks
+    prefetch_rows: int = 0             # predicted-hot rows pulled per
+                                       # micro-batch (0 = disabled)
     policy_half_life: float = 16.0
     policy_hysteresis: float = 0.1
     batch_window_v: float = 1e-3       # micro-batch time window (virtual s)
@@ -173,13 +175,13 @@ class GNNInferenceServer:
         loc = self.cache.loc
 
         # --- one deduplicated gather (or per-request, for the ablation)
-        # through the cache's split-phase API, same path as the trainer --
-        io_v0 = self.io.stats.virtual_io_s
+        # through the cache's split-phase API, same path as the trainer;
+        # t_storage is the ticket-resolved virtual time (robust against a
+        # shared engine serving concurrent consumers, unlike a stats delta)
         naive_storage = sum(int((loc[u] == 2).sum())
                             for u in micro.unique_per_request)
-        feats, n_dev, n_host, issued_storage, rows_fetched = \
+        feats, n_dev, n_host, issued_storage, rows_fetched, t_storage = \
             self.batcher.gather(self.cache, micro, cfg.dedup)
-        t_storage = self.io.stats.virtual_io_s - io_v0
 
         # --- forward pass per request (shared compiled step) -------------
         import jax.numpy as jnp
@@ -228,6 +230,14 @@ class GNNInferenceServer:
         if refresh is not None and refresh.virtual_s:
             self.clock.schedule("io" if self._pipelined else "serial",
                                 e_io, refresh.virtual_s)
+        # policy-driven prefetch: rows the score trend predicts will turn
+        # hot are pulled ahead of their first request, riding the io
+        # resource like migration does
+        if cfg.prefetch_rows > 0:
+            pf = self.cache.maybe_prefetch(cfg.prefetch_rows)
+            if pf is not None and pf.virtual_s:
+                self.clock.schedule("io" if self._pipelined else "serial",
+                                    e_io, pf.virtual_s)
 
         # --- complete futures + metrics ----------------------------------
         st = self.stats
