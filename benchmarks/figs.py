@@ -237,7 +237,7 @@ def cache_policy():
     for mode in ("helios", "gids", "cpu"):
         dev_rows, host_rows = tier_rows(mode, N_V, 0.05, 0.10)
         hit = {}
-        for kind in ("static", "online", "oracle"):
+        for kind in ("static", "online", "oracle", "belady"):
             eng = make_engine(mode, store)
             policy = make_policy(kind, N_V, presample=pres, trace=trace,
                                  refresh_every=every, half_life=8,
@@ -261,7 +261,8 @@ def cache_policy():
             eng.close()
         emit(f"cache_policy/{mode}/summary", 0.0,
              f"online_gain={hit['online'] - hit['static']:.3f};"
-             f"oracle_bound_ok={int(hit['oracle'] >= hit['online'] >= hit['static'])}")
+             f"oracle_bound_ok={int(hit['oracle'] >= hit['online'] >= hit['static'])};"
+             f"belady_headroom={hit['belady'] - hit['oracle']:.3f}")
 
 
 def io_path():
@@ -278,6 +279,13 @@ def io_path():
         refresh disabled so the reduction is attributable to prefetch.
     (c) Engine-mode ordering: helios < gids < cpu virtual time per batch
         still holds on the new read path (paper Fig. 5 ordering).
+    (d) Write path, engine level: striped + range-coalesced submit_write
+        vs the single-queue 4K-random write baseline on skewed updates.
+        Acceptance: striped-gap8 >= 2x legacy effective write bandwidth.
+    (e) Write path, cache level: write-back mutable tiers (dirty rows,
+        flush-on-demote, epoch flush barrier) vs the write-through
+        ablation on a drifting skewed update stream.  Acceptance:
+        write-back >= 2x write-through effective write bandwidth.
     """
     # the engine sweep keeps full-size batches even in smoke mode: the >=2x
     # acceptance ratio needs realistic per-shard run density, and raw engine
@@ -298,7 +306,9 @@ def io_path():
                           ("striped-gap0", dict(striped=True,
                                                 coalesce_gap=0)),
                           ("striped-gap8", dict(striped=True,
-                                                coalesce_gap=8))):
+                                                coalesce_gap=8)),
+                          ("striped-adaptive",
+                           dict(striped=True, coalesce_gap="adaptive"))):
             eng = AsyncIOEngine(store, worker_budget=0.3, **kw)
             for b in batches:
                 eng.submit(b).wait()
@@ -369,6 +379,74 @@ def io_path():
              f"x_vs_helios={t['helios'] / t[mode]:.3f}")
     emit("io_path/modes/summary", 0.0,
          f"ordering_ok={int(t['helios'] < t['gids'] < t['cpu'])}")
+
+    # --- (d) write path: engine write sweep ------------------------------
+    # striped per-shard SQE write batches + range-coalesced sequential
+    # writes vs the single-queue 4K-random write baseline, skewed updates
+    wstore = FeatureStore(os.path.join(ROOT, "iow"), n_rows=N_V, row_dim=128,
+                          n_shards=12, create=True, rng_seed=0, writable=True)
+    p = 1.0 / (np.arange(N_V) + 1.0) ** 1.2
+    p /= p.sum()
+    wids = [np.unique(rng.choice(N_V, size=n_req, p=p)) for _ in range(n_b)]
+    base_wbw = None
+    for label, kw in (("legacy-1q", dict(striped=False)),
+                      ("striped-gap8", dict(striped=True, coalesce_gap=8)),
+                      ("striped-adaptive",
+                       dict(striped=True, coalesce_gap="adaptive"))):
+        eng = AsyncIOEngine(wstore, worker_budget=0.3, **kw)
+        for ids in wids:
+            rows = rng.standard_normal((len(ids), 128)).astype(np.float32)
+            eng.submit_write(ids, rows).wait()
+        wbw = eng.stats.write_bw()
+        if base_wbw is None:
+            base_wbw = wbw
+        amp = eng.stats.write_span_bytes / max(eng.stats.write_bytes, 1)
+        emit(f"io_path/write/{label}",
+             eng.stats.virtual_write_s * 1e6 / n_b,
+             f"GBps={wbw / 1e9:.2f};x_vs_legacy={wbw / base_wbw:.2f};"
+             f"ranges={eng.stats.write_ranges};write_amp={amp:.2f}")
+        eng.close()
+
+    # --- (e) write policy: write-back mutable tiers vs write-through -----
+    # a stationary skewed update stream (gather -> SGD-ish write ->
+    # refresh) through the cache: write-back absorbs repeated hot-row
+    # updates in the tiers and pays storage only on demotion + the epoch
+    # flush barrier (both striped + coalesced), while the write-through
+    # ablation pays a random single-queue storage write for EVERY update
+    n_upd, upd_batch = (12 if SMOKE else 24), 2048
+    urng = np.random.default_rng(2)
+    upd_trace = [urng.choice(N_V, size=upd_batch, p=p) for _ in range(n_upd)]
+    pres = np.zeros(N_V)
+    for b in upd_trace[:4]:
+        np.add.at(pres, b, 1.0)
+    eff = {}
+    for label, striped, wpol in (
+            ("writethrough-1q", False, "writethrough"),
+            ("writeback-striped", True, "writeback")):
+        eng = AsyncIOEngine(wstore, worker_budget=0.3, striped=striped,
+                            coalesce_gap=8)
+        policy = make_policy("online", N_V, presample=pres, refresh_every=8,
+                             half_life=8, hysteresis=0.1)
+        cache = HeteroCache(wstore, None, int(N_V * 0.05), int(N_V * 0.20),
+                            eng, policy=policy, write_policy=wpol)
+        for ids in upd_trace:
+            rows = cache.gather(ids)
+            cache.write_planned(ids, rows * 0.999)
+            cache.maybe_refresh()
+        cache.flush()
+        st = cache.stats
+        useful = st.written_rows * wstore.row_bytes
+        virt = st.virtual_write_s + st.virtual_flush_s
+        eff[label] = useful / virt
+        emit(f"io_path/write/{label}", virt * 1e6 / n_upd,
+             f"eff_write_GBps={eff[label] / 1e9:.2f};"
+             f"through_rows={st.write_through_rows};"
+             f"flushed_rows={st.flushed_rows};flushes={st.flushes}")
+        cache.close()
+        eng.close()
+    emit("io_path/write/policy-summary", 0.0,
+         f"x_writeback_vs_writethrough="
+         f"{eff['writeback-striped'] / eff['writethrough-1q']:.2f}")
 
 
 def table1_datasets():

@@ -10,7 +10,13 @@ Designed for 1000+ node runs:
   * elastic: arrays are saved DEVICE-LAYOUT-FREE (full logical value +
     the logical spec names), so restore can re-shard onto a different mesh
     (scale up/down between runs);
-  * keep-k GC + data-iterator state included for exact resume.
+  * keep-k GC + data-iterator state included for exact resume;
+  * sharded embedding tables: ``save_embeddings``/``restore_embeddings``
+    stream a terabyte-class trainable-embedding ``FeatureStore`` shard by
+    shard THROUGH the IO engine's ``submit_write`` path (chunked, striped,
+    range-coalesced) instead of materializing one monolithic host array —
+    the write-path mirror of the gather stack, with per-shard checksums in
+    the manifest.
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ import os
 import shutil
 import threading
 import time
+import zlib
 
 import jax
 import numpy as np
@@ -161,3 +168,126 @@ class CheckpointManager:
                 k: jax.device_put(v, flat_sh[k]) if k in flat_sh else v
                 for k, v in _flatten(state).items()})
         return state, manifest["extra"] | {"step": manifest["step"]}
+
+    # ------------------------------------------------------------------
+    # sharded embedding-table checkpoints (streamed through submit_write)
+    # ------------------------------------------------------------------
+    _EMB_INFLIGHT = 2                   # write tickets kept in flight
+
+    @staticmethod
+    def _file_crc(path: str) -> int:
+        crc = 0
+        with open(path, "rb") as fh:
+            while True:
+                block = fh.read(1 << 20)
+                if not block:
+                    return crc
+                crc = zlib.crc32(block, crc)
+
+    def _stream_rows(self, src, dst_engine, chunk_rows: int) -> float:
+        """Copy every row of ``src`` into ``dst_engine``'s store through
+        chunked ``submit_write`` tickets, a bounded window of them in
+        flight — terabyte tables never materialize on the host.  Returns
+        the summed virtual write seconds."""
+        virt, inflight = 0.0, []
+        for lo in range(0, src.n_rows, chunk_rows):
+            ids = np.arange(lo, min(src.n_rows, lo + chunk_rows))
+            inflight.append(dst_engine.submit_write(ids, src.read_rows(ids),
+                                                    tag="ckpt"))
+            while len(inflight) >= self._EMB_INFLIGHT:
+                virt += inflight.pop(0).wait()[1]
+        for tk in inflight:
+            virt += tk.wait()[1]
+        return virt
+
+    def save_embeddings(self, step: int, store, chunk_rows: int = 65536,
+                        extra: dict | None = None, striped: bool = True,
+                        coalesce_gap=8) -> dict:
+        """Checkpoint a (flushed) embedding ``FeatureStore`` as a sharded
+        table: rows stream in chunks through a striped ``submit_write``
+        engine into a stage-dir FeatureStore with identical geometry, the
+        manifest records per-shard CRCs, and the atomic rename publishes.
+        Call ``cache.flush()`` first so storage is authoritative."""
+        from repro.core.iostack import AsyncIOEngine, FeatureStore
+        stage = os.path.join(self.dir, f".stage_emb_{step}")
+        final = os.path.join(self.dir, f"emb_{step:010d}")
+        shutil.rmtree(stage, ignore_errors=True)
+        os.makedirs(stage)
+        dest = FeatureStore(os.path.join(stage, "table"), store.n_rows,
+                            store.row_dim, dtype=store.dtype,
+                            n_shards=store.n_shards, create=True,
+                            writable=True)
+        with AsyncIOEngine(dest, striped=striped,
+                           coalesce_gap=coalesce_gap) as eng:
+            virt = self._stream_rows(store, eng, chunk_rows)
+        dest.flush()
+        shards = {}
+        for s in range(store.n_shards):
+            fn = f"shard_{s}.bin"
+            shards[str(s)] = {
+                "file": f"table/{fn}",
+                "crc32": self._file_crc(os.path.join(stage, "table", fn))}
+        manifest = {"step": step, "kind": "embedding",
+                    "geometry": {"n_rows": store.n_rows,
+                                 "row_dim": store.row_dim,
+                                 "dtype": store.dtype.name,
+                                 "n_shards": store.n_shards},
+                    "shards": shards, "virtual_write_s": virt,
+                    "extra": extra or {}, "time": time.time()}
+        with open(os.path.join(stage, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(stage, final)        # atomic publish
+        self._gc_embeddings()
+        return manifest
+
+    def restore_embeddings(self, store, step: int | None = None,
+                           chunk_rows: int = 65536, verify: bool = True,
+                           striped: bool = True, coalesce_gap=8) -> dict:
+        """Stream a sharded embedding checkpoint back into the LIVE
+        (writable) ``store`` through ``submit_write``; per-shard CRCs are
+        verified before a single row lands."""
+        from repro.core.iostack import AsyncIOEngine, FeatureStore
+        step = step if step is not None else self.latest_embedding_step()
+        if step is None:
+            raise FileNotFoundError("no embedding checkpoint found")
+        d = os.path.join(self.dir, f"emb_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        geo = manifest["geometry"]
+        want = {"n_rows": store.n_rows, "row_dim": store.row_dim,
+                "dtype": store.dtype.name, "n_shards": store.n_shards}
+        if geo != want:
+            raise ValueError(f"embedding checkpoint geometry {geo} != "
+                             f"live store {want}")
+        if verify:
+            for s, ent in manifest["shards"].items():
+                crc = self._file_crc(os.path.join(d, ent["file"]))
+                if crc != ent["crc32"]:
+                    raise IOError(f"embedding shard {s} corrupt: "
+                                  f"crc {crc:#x} != {ent['crc32']:#x}")
+        src = FeatureStore(os.path.join(d, "table"), geo["n_rows"],
+                           geo["row_dim"], dtype=np.dtype(geo["dtype"]),
+                           n_shards=geo["n_shards"])
+        with AsyncIOEngine(store, striped=striped,
+                           coalesce_gap=coalesce_gap) as eng:
+            virt = self._stream_rows(src, eng, chunk_rows)
+        store.flush()
+        return manifest | {"restore_virtual_write_s": virt}
+
+    def all_embedding_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("emb_") and \
+                    os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(d[4:]))
+        return sorted(out)
+
+    def latest_embedding_step(self) -> int | None:
+        steps = self.all_embedding_steps()
+        return steps[-1] if steps else None
+
+    def _gc_embeddings(self):
+        for s in self.all_embedding_steps()[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"emb_{s:010d}"),
+                          ignore_errors=True)

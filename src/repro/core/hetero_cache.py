@@ -35,12 +35,13 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.iostack import AsyncIOEngine, FeatureStore
+from repro.core.iostack import AsyncIOEngine, FeatureStore, keep_last_writer
 from repro.core.policy import (CachePolicy, StaticPresamplePolicy,
                                tables_from_sets)
 from repro.core.simulator import (DEFAULT_ENVELOPE, HardwareEnvelope,
                                   dram_gather_time, hbm_gather_time,
                                   pcie_time)
+from repro.core.writeback import FlushResult, MutableTierTable, WriteResult
 
 
 @dataclass
@@ -63,6 +64,14 @@ class CacheStats:
     prefetches: int = 0
     prefetched_rows: int = 0
     virtual_prefetch_s: float = 0.0
+    # write-path accounting (write_planned()/flush())
+    writes: int = 0                     # write_planned calls
+    written_rows: int = 0               # unique rows updated
+    write_through_rows: int = 0         # rows written straight to storage
+    flushes: int = 0                    # explicit flush() barriers
+    flushed_rows: int = 0               # dirty rows written back (incl. demote)
+    virtual_write_s: float = 0.0        # write-through ticket time
+    virtual_flush_s: float = 0.0        # flush + flush-on-demote ticket time
 
     @property
     def hit_rate(self):
@@ -77,13 +86,20 @@ class CacheStats:
 
 @dataclass
 class RefreshResult:
-    """One ``refresh()``: how much moved and what it costs in virtual time."""
+    """One ``refresh()``: how much moved and what it costs in virtual time.
+
+    ``virtual_s`` is the TOTAL operator cost (migration + flush-on-demote)
+    — what the pipeline charges; ``flush_virtual_s`` is the flush share,
+    which the stats book under ``virtual_flush_s`` (not
+    ``virtual_migrate_s``) so the per-category counters stay disjoint."""
     promotions: int = 0
     demotions: int = 0
     device_in: int = 0                  # rows newly resident in HBM
     host_in: int = 0                    # rows newly resident in DRAM
     moved_bytes: int = 0
     virtual_s: float = 0.0
+    flushed: int = 0                    # dirty rows written back pre-demotion
+    flush_virtual_s: float = 0.0        # share of virtual_s spent flushing
 
 
 @dataclass
@@ -92,6 +108,28 @@ class PrefetchResult:
     rows: int = 0
     tier: str = ""                      # "host" | "device"
     virtual_s: float = 0.0
+
+
+class PendingPrefetch:
+    """In-flight split-phase prefetch: the admission ticket is issued but
+    the tier swap has not landed.  Lets the trainer keep one prefetch
+    ticket in flight ACROSS batches (double-buffered cadence) instead of
+    blocking inside the operator.  ``complete_prefetch`` revalidates
+    against the live tables — a refresh landing mid-flight invalidates the
+    stale admissions rather than corrupting the tiers."""
+
+    __slots__ = ("ids", "tier", "victims", "victim_ids", "buf", "ticket",
+                 "versions")
+
+    def __init__(self, ids, tier, victims, victim_ids, buf, ticket,
+                 versions=None):
+        self.ids = ids
+        self.tier = tier
+        self.victims = victims          # slot indices in the target tier
+        self.victim_ids = victim_ids    # row ids those slots held at issue
+        self.buf = buf
+        self.ticket = ticket
+        self.versions = versions        # write versions of ids at issue
 
 
 class PendingGather:
@@ -149,15 +187,29 @@ def tier_rows(mode: str, n_vertices: int, device_frac: float,
 
 
 class HeteroCache:
-    """Policy-placed 3-tier feature cache with asynchronous tier migration."""
+    """Policy-placed 3-tier feature cache with asynchronous tier migration
+    and (over a writable store) write-back mutable tiers: ``write_planned``
+    updates resident rows in place and marks them dirty, dirty rows flush
+    to storage on demotion or at a ``flush()`` barrier, and placement sees
+    dirtiness so demoting a row that costs a write needs a hotter
+    challenger."""
 
     def __init__(self, store: FeatureStore, hotness: np.ndarray | None = None,
                  device_rows: int = 0, host_rows: int = 0,
                  io_engine: AsyncIOEngine | None = None,
                  env: HardwareEnvelope = DEFAULT_ENVELOPE,
-                 policy: CachePolicy | None = None):
+                 policy: CachePolicy | None = None,
+                 write_policy: str = "writeback"):
+        if write_policy not in ("writeback", "writethrough"):
+            raise ValueError(f"unknown write_policy {write_policy!r} "
+                             "(expected writeback | writethrough)")
         self.store = store
         self.env = env
+        self.write_policy = write_policy
+        # mutable tiers need somewhere to flush to: dirty tracking only
+        # exists over a writable store (read-only stores keep the PR-3
+        # behavior exactly — eviction stays free)
+        self.mut = MutableTierTable(store.n_rows) if store.writable else None
         self._owns_engine = io_engine is None
         self.io = io_engine or AsyncIOEngine(store, env=env)
         if policy is None:
@@ -278,6 +330,175 @@ class HeteroCache:
         return self.complete_planned(self.submit_planned(ids))
 
     # ------------------------------------------------------------------
+    # write path: mutable tiers, write-back dirty tracking, flush barrier
+    # ------------------------------------------------------------------
+    def write_planned(self, ids: np.ndarray, rows: np.ndarray) -> WriteResult:
+        """Update feature rows through the tier hierarchy.
+
+        Resident rows are updated IN PLACE in their tier (host DRAM scatter;
+        device HBM functional update swapped atomically) and, under the
+        default ``writeback`` policy, marked dirty — storage is deferred to
+        flush-on-demote or an explicit ``flush()``.  Storage-resident rows
+        always write through (``submit_write``), so a gather after a write
+        returns the new value no matter where the row lives
+        (read-your-writes).  The ``writethrough`` ablation also pushes every
+        cached write to storage immediately.  Duplicate ids resolve
+        last-writer-wins in batch order.
+        """
+        if self.mut is None:
+            raise PermissionError("write_planned needs a writable "
+                                  "FeatureStore (writable=True)")
+        import jax.numpy as jnp
+        ids = np.asarray(ids)
+        rows = np.asarray(rows, self.store.dtype)
+        if rows.shape != (len(ids), self.store.row_dim):
+            raise ValueError(f"rows shape {rows.shape} != "
+                             f"({len(ids)}, {self.store.row_dim})")
+        ids, rows = keep_last_writer(ids, rows)
+        res = WriteResult(rows=len(ids))
+        if not len(ids):
+            return res
+        with self._refresh_lock:
+            lc = self.loc[ids]
+            d, h, m = lc == 0, lc == 1, lc == 2
+            if h.any():
+                # copy-on-write, same snapshot discipline as refresh(): an
+                # in-flight gather pinned the OLD array, so scattering into
+                # it in place could hand that gather a torn row (half
+                # pre-write, half post-write) — build aside, swap atomically
+                host_tier = self.host_tier.copy()
+                host_tier[self.slot[ids[h]]] = rows[h]
+                with self._table_lock:
+                    self.host_tier = host_tier
+            if d.any():
+                with self._table_lock:
+                    self.device_tier = self.device_tier.at[
+                        jnp.asarray(self.slot[ids[d]])].set(jnp.asarray(rows[d]))
+            res.device_rows, res.host_rows = int(d.sum()), int(h.sum())
+            through = (m if self.write_policy == "writeback"
+                       else np.ones(len(ids), bool))
+            if through.any():
+                _, virt = self.io.submit_write(ids[through], rows[through],
+                                               tag="write").wait()
+                res.through_rows = int(through.sum())
+                res.virtual_s = virt
+            if self.write_policy == "writeback":
+                self.mut.mark_dirty(ids[~m])
+                self.mut.bump_version(ids[m])
+            else:
+                self.mut.bump_version(ids)
+            with self._stats_lock:
+                st = self.stats
+                st.writes += 1
+                st.written_rows += len(ids)
+                st.write_through_rows += res.through_rows
+                st.virtual_write_s += res.virtual_s
+        return res
+
+    def apply_delta(self, ids: np.ndarray, delta: np.ndarray) -> WriteResult:
+        """Read-modify-write: add ``delta`` to the CURRENT value of each row
+        and write the sum back through ``write_planned``.
+
+        This is the right primitive for gradient updates under the deep
+        pipeline: an absolute ``write_planned(ids, stale_gather - lr*g)``
+        from a concurrent batch would silently revert another batch's
+        update to a shared hot row (lost update), whereas deltas re-read
+        the live value under the refresh lock so updates COMPOSE no matter
+        how batches interleave.  Duplicate ids contribute their summed
+        delta.  Storage-resident rows pay a real RMW read ticket before
+        the write-through."""
+        if self.mut is None:
+            raise PermissionError("apply_delta needs a writable "
+                                  "FeatureStore (writable=True)")
+        import jax.numpy as jnp
+        ids = np.asarray(ids)
+        delta = np.asarray(delta, self.store.dtype)
+        if delta.shape != (len(ids), self.store.row_dim):
+            raise ValueError(f"delta shape {delta.shape} != "
+                             f"({len(ids)}, {self.store.row_dim})")
+        if len(ids) == 0:
+            return WriteResult()
+        uniq, inv = np.unique(ids, return_inverse=True)
+        summed = np.zeros((len(uniq), self.store.row_dim), self.store.dtype)
+        np.add.at(summed, inv, delta)
+        with self._refresh_lock:                # RLock: write_planned re-enters
+            cur = np.empty((len(uniq), self.store.row_dim), self.store.dtype)
+            lc, sl = self.loc[uniq], self.slot[uniq]
+            h, d, m = lc == 1, lc == 0, lc == 2
+            if h.any():
+                cur[h] = self.host_tier[sl[h]]
+            if d.any():
+                cur[d] = np.asarray(jnp.take(self.device_tier,
+                                             jnp.asarray(sl[d]), axis=0))
+            rmw_virt = 0.0
+            if m.any():
+                _, rmw_virt = self.io.submit(uniq[m], cur, m.nonzero()[0],
+                                             tag="rmw").wait()
+            res = self.write_planned(uniq, cur + summed)
+            # the RMW read rides res.virtual_s so the pipeline charges it
+            # to the writing operator; the engine already booked it on the
+            # READ side (virtual_io_s), keeping cache write stats == engine
+            # write stats exactly
+            res.virtual_s += rmw_virt
+            return res
+
+    def _write_back(self, ids: np.ndarray, tag: str) -> float:
+        """Write the CURRENT tier values of ``ids`` to storage through one
+        batched ``submit_write`` ticket and clear their dirty bits.  Caller
+        holds the refresh lock; tables/tier arrays must still map the rows
+        (call BEFORE any demotion swap drops the tier copy)."""
+        import jax.numpy as jnp
+        rows = np.empty((len(ids), self.store.row_dim), self.store.dtype)
+        lc, sl = self.loc[ids], self.slot[ids]
+        h = lc == 1
+        if h.any():
+            rows[h] = self.host_tier[sl[h]]
+        d = lc == 0
+        if d.any():
+            rows[d] = np.asarray(jnp.take(self.device_tier,
+                                          jnp.asarray(sl[d]), axis=0))
+        _, virt = self.io.submit_write(ids, rows, tag=tag).wait()
+        self.mut.clear_dirty(ids)
+        with self._stats_lock:
+            self.stats.flushed_rows += len(ids)
+            self.stats.virtual_flush_s += virt
+        return virt
+
+    def _flush_demoted(self, ids: np.ndarray) -> tuple:
+        """Flush-on-demote: of ``ids`` (rows about to lose their cached
+        copy), write back the dirty ones.  Returns (n_flushed, virt)."""
+        if self.mut is None or not len(ids):
+            return 0, 0.0
+        dirty = ids[self.mut.is_dirty(ids)]
+        if not len(dirty):
+            return 0, 0.0
+        return len(dirty), self._write_back(dirty, tag="flush-demote")
+
+    def flush(self) -> FlushResult:
+        """Epoch/checkpoint barrier: write back EVERY dirty row through one
+        batched ticket (the striped engine splits it per shard and
+        coalesces dirty runs into sequential writes), then push the shard
+        memmaps to storage for durability.  After flush() returns, storage
+        alone reconstructs every written value."""
+        if self.mut is None:
+            return FlushResult()
+        with self._refresh_lock:
+            ids = self.mut.dirty_ids()
+            virt = self._write_back(ids, tag="flush") if len(ids) else 0.0
+            # the durability barrier runs even with nothing dirty:
+            # write-through rows landed in the memmaps without an msync,
+            # and the barrier is what makes THEM crash-safe too
+            self.store.flush()
+            with self._stats_lock:
+                self.stats.flushes += 1
+            return FlushResult(len(ids), len(ids) * self.store.row_bytes,
+                               virt)
+
+    @property
+    def n_dirty(self) -> int:
+        return self.mut.n_dirty if self.mut is not None else 0
+
+    # ------------------------------------------------------------------
     # asynchronous tier migration
     # ------------------------------------------------------------------
     def refresh(self, scores: np.ndarray) -> RefreshResult:
@@ -311,6 +532,20 @@ class HeteroCache:
             rb = self.store.row_bytes
             res = RefreshResult(device_in=len(dev_in), host_in=len(host_in))
             if len(dev_in) or len(host_in):
+                # flush-on-demote: rows losing their LAST cached copy (not
+                # merely changing tier) write their current value back
+                # through one batched ticket BEFORE the swap drops it —
+                # dirty data must never be evicted into oblivion
+                flush_virt = 0.0
+                if self.mut is not None:
+                    out_ids = np.concatenate([cur_dev[~dev_keep],
+                                              cur_host[~host_keep]])
+                    if len(out_ids):
+                        stay = np.isin(out_ids,
+                                       np.concatenate([new_dev, new_host]))
+                        res.flushed, flush_virt = \
+                            self._flush_demoted(out_ids[~stay])
+                        res.flush_virtual_s = flush_virt
                 # admissions to HBM: promote from DRAM when resident there,
                 # otherwise pull through the storage stack
                 dev_buf = np.empty((len(dev_in), self.store.row_dim),
@@ -366,7 +601,7 @@ class HeteroCache:
                 # time, same accounting rule as complete_planned)
                 virt = pcie_time((int(from_host.sum())
                                   + int(from_dev.sum())) * rb, self.env)
-                virt += virt_adm
+                virt += virt_adm + flush_virt
                 res.promotions = int((loc < old_loc).sum())
                 res.demotions = int((loc > old_loc).sum())
                 res.moved_bytes = (len(dev_in) + len(host_in)) * rb
@@ -383,7 +618,10 @@ class HeteroCache:
                 st.promotions += res.promotions
                 st.demotions += res.demotions
                 st.migrated_bytes += res.moved_bytes
-                st.virtual_migrate_s += res.virtual_s
+                # flush-on-demote seconds already landed in virtual_flush_s
+                # (inside _write_back) — book only the migration share here
+                # so the per-category counters never double-count
+                st.virtual_migrate_s += res.virtual_s - res.flush_virtual_s
             return res
 
     def maybe_refresh(self) -> RefreshResult | None:
@@ -399,7 +637,8 @@ class HeteroCache:
         with self._refresh_lock:
             if not pol.refresh_due():       # another operator got here first
                 return None
-            scores = pol.placement_scores(self.loc)
+            dirty = self.mut.dirty_mask() if self.mut is not None else None
+            scores = pol.placement_scores(self.loc, dirty=dirty)
             if scores is None:
                 return None
             res = self.refresh(scores)
@@ -409,13 +648,17 @@ class HeteroCache:
     # ------------------------------------------------------------------
     # policy-driven prefetch: hide the FIRST miss, not just steady state
     # ------------------------------------------------------------------
-    def maybe_prefetch(self, k: int | None = None) -> PrefetchResult | None:
+    def maybe_prefetch(self, k: int | None = None,
+                       wait: bool = True):
         """Ask the policy for predicted-hot storage rows (rising score
         trend) and pull them into the cache BEFORE they are requested.
         ``refresh()`` fixes steady-state placement; prefetch hides the cold
         first miss the steady state can never see.  Scheduled as the
         ``prefetch`` pipeline operator on the io resource so the pull hides
-        under device compute."""
+        under device compute.  ``wait=False`` returns a ``PendingPrefetch``
+        whose admission ticket is in flight — complete it later with
+        ``complete_prefetch`` (double-buffered cadence: the trainer issues
+        batch i+1's ticket before waiting on batch i's)."""
         fn = getattr(self.policy, "prefetch_candidates", None)
         if fn is None:
             return None
@@ -425,15 +668,16 @@ class HeteroCache:
             cand = fn(self.loc, k)
             if cand is None or not len(cand):
                 return None
-            return self.prefetch_rows(cand)
+            return self.prefetch_rows(cand, wait=wait)
 
-    def prefetch_rows(self, ids: np.ndarray) -> PrefetchResult | None:
+    def prefetch_rows(self, ids: np.ndarray, wait: bool = True):
         """Admit ``ids`` (storage-resident, ranked hottest-first) into the
         fastest tier with capacity — host DRAM when present, else device —
         evicting the coldest current residents.  The admission read is one
         batched ticket, so the striped engine coalesces it into sequential
-        per-shard ranges like refresh migration."""
-        import jax.numpy as jnp
+        per-shard ranges like refresh migration.  With ``wait=False`` the
+        ticket is issued and a ``PendingPrefetch`` returned; the tier swap
+        happens in ``complete_prefetch``."""
         with self._refresh_lock:
             ids = np.asarray(ids)
             ids = ids[self.loc[ids] == 2]           # storage-resident only
@@ -446,7 +690,8 @@ class HeteroCache:
             cap = self.host_rows if tier == "host" else self.device_rows
             ids = ids[:min(len(ids), cap)]          # caller ranked by trend
             cur = self._host_ids if tier == "host" else self._dev_ids
-            scores = self.policy.placement_scores(self.loc)
+            dirty = self.mut.dirty_mask() if self.mut is not None else None
+            scores = self.policy.placement_scores(self.loc, dirty=dirty)
             if scores is None:
                 victims = np.arange(len(cur) - len(ids), len(cur))
             else:
@@ -463,37 +708,74 @@ class HeteroCache:
                 ids, victims = ids[win], vict[win]
                 if not len(ids):
                     return None
+            buf = np.empty((len(ids), self.store.row_dim), self.store.dtype)
+            pp = PendingPrefetch(ids, tier, victims, cur[victims].copy(), buf,
+                                 self.io.submit(ids, buf, tag="prefetch"),
+                                 versions=(self.mut.versions(ids)
+                                           if self.mut is not None else None))
+        if wait:
+            return self.complete_prefetch(pp)
+        return pp
+
+    def complete_prefetch(self, pp: PendingPrefetch) -> PrefetchResult | None:
+        """Land an in-flight prefetch: wait out the admission ticket, then
+        swap the admitted rows in.  Admissions are revalidated against the
+        live tables — rows a concurrent refresh already admitted, and
+        victim slots whose resident changed mid-flight, are dropped rather
+        than applied stale."""
+        import jax.numpy as jnp
+        _, virt = pp.ticket.wait()
+        with self._refresh_lock:
+            cur = self._host_ids if pp.tier == "host" else self._dev_ids
+            ok = (self.loc[pp.ids] == 2) & (cur[pp.victims] == pp.victim_ids)
+            if pp.versions is not None:
+                # a write_planned that landed mid-flight (write-through on a
+                # storage row bumps its version) makes the prefetched buffer
+                # STALE — admitting it would shadow the newer value with
+                # pre-write bytes (read-your-writes violation)
+                ok &= self.mut.versions(pp.ids) == pp.versions
+            ids, victims, buf = pp.ids[ok], pp.victims[ok], pp.buf[ok]
             k = len(ids)
-            buf = np.empty((k, self.store.row_dim), self.store.dtype)
-            _, virt = self.io.submit(ids, buf, tag="prefetch").wait()
-            # copy-on-prefetch, same snapshot discipline as refresh(): new
-            # tables/tier arrays built aside, swapped atomically
-            new_ids = cur.copy()
-            new_ids[victims] = ids
-            if tier == "host":
-                tier_arr = self.host_tier.copy()
-                tier_arr[victims] = buf
-                loc, slot = tables_from_sets(self.store.n_rows,
-                                             self._dev_ids, new_ids)
-                with self._table_lock:
-                    self.loc, self.slot = loc, slot
-                    self.host_tier = tier_arr
-                    self._host_ids = new_ids
-            else:
-                tier_arr = self.device_tier.at[jnp.asarray(victims)].set(
-                    jnp.asarray(buf))
-                loc, slot = tables_from_sets(self.store.n_rows, new_ids,
-                                             self._host_ids)
-                with self._table_lock:
-                    self.loc, self.slot = loc, slot
-                    self.device_tier = tier_arr
-                    self._dev_ids = new_ids
+            flush_virt = 0.0
+            if k:
+                # flush-on-demote: evicted victims may hold dirty values
+                _, flush_virt = self._flush_demoted(cur[victims])
+                # copy-on-prefetch, same snapshot discipline as refresh():
+                # new tables/tier arrays built aside, swapped atomically
+                new_ids = cur.copy()
+                new_ids[victims] = ids
+                if pp.tier == "host":
+                    tier_arr = self.host_tier.copy()
+                    tier_arr[victims] = buf
+                    loc, slot = tables_from_sets(self.store.n_rows,
+                                                 self._dev_ids, new_ids)
+                    with self._table_lock:
+                        self.loc, self.slot = loc, slot
+                        self.host_tier = tier_arr
+                        self._host_ids = new_ids
+                else:
+                    tier_arr = self.device_tier.at[jnp.asarray(victims)].set(
+                        jnp.asarray(buf))
+                    loc, slot = tables_from_sets(self.store.n_rows, new_ids,
+                                                 self._host_ids)
+                    with self._table_lock:
+                        self.loc, self.slot = loc, slot
+                        self.device_tier = tier_arr
+                        self._dev_ids = new_ids
             with self._stats_lock:
                 st = self.stats
                 st.prefetches += 1
                 st.prefetched_rows += k
+                # the flush share already landed in virtual_flush_s (inside
+                # _write_back); book only the admission read here, but
+                # return the TOTAL operator cost so the pipeline charges
+                # the flush write to the prefetch operator that caused it
                 st.virtual_prefetch_s += virt
-            return PrefetchResult(k, tier, virt)
+            # rows=0 when every admission was invalidated mid-flight — the
+            # ticket's IO seconds were still spent, so the result carries
+            # them for the operator's virtual cost instead of returning
+            # None and charging the pipeline nothing
+            return PrefetchResult(k, pp.tier, virt + flush_virt)
 
     # ------------------------------------------------------------------
     def close(self):

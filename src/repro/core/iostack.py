@@ -58,10 +58,11 @@ class FeatureStore:
 
     def __init__(self, path: str, n_rows: int, row_dim: int,
                  dtype=np.float32, n_shards: int = 12, create: bool = False,
-                 rng_seed: int | None = None):
+                 rng_seed: int | None = None, writable: bool = False):
         self.n_rows, self.row_dim, self.n_shards = n_rows, row_dim, n_shards
         self.dtype = np.dtype(dtype)
         self.row_bytes = self.row_dim * self.dtype.itemsize
+        self.writable = writable
         os.makedirs(path, exist_ok=True)
         # layout marker: stores written under the old contiguous range
         # partitioning would otherwise reopen and silently permute rows
@@ -89,7 +90,8 @@ class FeatureStore:
                         j = min(shape[0], i + block)
                         mm[i:j] = rng.standard_normal((j - i, row_dim)).astype(self.dtype)
                 mm.flush()
-            self.shards.append(np.lib.format.open_memmap(f, mode="r"))
+            self.shards.append(np.lib.format.open_memmap(
+                f, mode="r+" if writable else "r"))
         if fresh:
             with open(marker, "w") as fh:
                 fh.write(self._layout_tag() + "\n")
@@ -106,6 +108,41 @@ class FeatureStore:
             if m.any():
                 out[m] = self.shards[s][off[m]]
         return out
+
+    def write_rows(self, ids: np.ndarray, rows: np.ndarray,
+                   dedupe: bool = True) -> None:
+        """Raw synchronous scatter (no timing model); duplicate ids resolve
+        last-writer-wins in batch order.  Engine paths that already ran
+        ``keep_last_writer`` at submit time pass ``dedupe=False`` to skip
+        the second O(n log n) pass."""
+        if not self.writable:
+            raise PermissionError("feature store opened read-only; "
+                                  "pass writable=True to enable the write path")
+        if dedupe:
+            ids, rows = keep_last_writer(np.asarray(ids), np.asarray(rows))
+        sid, off = self.locate(ids)
+        for s in range(self.n_shards):
+            m = sid == s
+            if m.any():
+                self.shards[s][off[m]] = rows[m]
+
+    def flush(self) -> None:
+        """Durability barrier: push every shard's dirty pages to storage."""
+        for mm in self.shards:
+            mm.flush()
+
+
+def keep_last_writer(ids: np.ndarray, rows: np.ndarray):
+    """Deduplicate a write batch so each row id appears once, keeping the
+    LAST occurrence (batch order is program order, so later writes win).
+    Returns (ids, rows) aligned; deterministic regardless of how the engine
+    later sorts or stripes the batch."""
+    if len(ids) < 2:
+        return ids, rows
+    _, first_in_rev = np.unique(ids[::-1], return_index=True)
+    last = len(ids) - 1 - first_in_rev
+    last.sort()                       # preserve batch order among survivors
+    return ids[last], rows[last]
 
 
 # ---------------------------------------------------------------------------
@@ -137,9 +174,21 @@ class IOStats:
     shard_batches: int = 0              # per-shard SQE batches submitted
     ranges: int = 0                     # sequential range reads issued
     span_bytes: int = 0                 # bytes streamed incl. coalesce waste
+    # write-path accounting (submit_write mirrors of the read fields)
+    write_requests: int = 0
+    write_bytes: int = 0                # useful payload bytes written
+    virtual_write_s: float = 0.0
+    write_batches: int = 0
+    write_shard_batches: int = 0
+    write_ranges: int = 0               # sequential range writes issued
+    write_span_bytes: int = 0           # bytes streamed incl. coalesce waste
 
     def bw(self) -> float:
         return self.bytes / self.virtual_io_s if self.virtual_io_s else 0.0
+
+    def write_bw(self) -> float:
+        return (self.write_bytes / self.virtual_write_s
+                if self.virtual_write_s else 0.0)
 
 
 def coalesce_offsets(offsets: np.ndarray, gap: int):
@@ -162,6 +211,39 @@ def coalesce_offsets(offsets: np.ndarray, gap: int):
     return order, bounds
 
 
+ADAPTIVE_GAP = "adaptive"               # coalesce_gap sentinel
+
+
+def pick_coalesce_gap(offsets: np.ndarray, max_gap: int = 64,
+                      amp_cap: float = 1.5) -> int:
+    """Per-batch coalesce gap from observed offset density.
+
+    Joining two runs separated by ``d-1`` unrequested rows costs ``d-1``
+    waste rows; a dense hot-head batch has many tiny inter-offset gaps, so
+    a big gap buys long sequential runs almost for free, while a uniform
+    tail batch would pay unbounded read amplification for the same gap.
+    Picks the LARGEST gap (<= ``max_gap``) whose total amplification stays
+    under ``amp_cap`` x the useful rows: waste is summed over exactly the
+    joins that gap would perform, so the bound is exact, not heuristic.
+    """
+    n = len(offsets)
+    if n < 2:
+        return 0
+    waste = np.diff(np.sort(offsets)) - 1
+    waste = waste[(waste > 0) & (waste <= max_gap)]
+    if not len(waste):
+        return 0                        # only adjacent/duplicate rows: any
+    waste.sort()                        # gap coalesces them waste-free
+    cum = np.cumsum(waste)
+    budget = (amp_cap - 1.0) * n
+    # cost(g) = total waste of every join with per-join waste <= g; feasible
+    # gaps are the unique waste values whose cumulative cost fits the budget
+    uniq, first = np.unique(waste, return_index=True)
+    last = np.append(first[1:], len(waste)) - 1
+    ok = cum[last] <= budget
+    return int(uniq[ok][-1]) if ok.any() else 0
+
+
 class _ShardedCompletion:
     """Aggregates per-shard completions of one striped request batch.
 
@@ -172,9 +254,10 @@ class _ShardedCompletion:
     """
 
     __slots__ = ("engine", "fut", "data", "pending", "max_virt", "ranges",
-                 "span_bytes", "wall", "failed", "_lk")
+                 "span_bytes", "wall", "failed", "kind", "_lk")
 
-    def __init__(self, engine, fut: Future, data, pending: int):
+    def __init__(self, engine, fut: Future, data, pending: int,
+                 kind: str = "r"):
         self.engine = engine
         self.fut = fut
         self.data = data                # returned payload (None if caller
@@ -184,6 +267,7 @@ class _ShardedCompletion:
         self.span_bytes = 0
         self.wall = 0.0
         self.failed = False
+        self.kind = kind                # "r" read | "w" write
         self._lk = threading.Lock()
 
     def shard_done(self, virt: float, n_ranges: int, span_bytes: int,
@@ -210,10 +294,16 @@ class _ShardedCompletion:
         eng = self.engine
         virt = max(self.max_virt, self.span_bytes / eng.env.pcie_bw)
         with eng._lock:
-            eng.stats.virtual_io_s += virt
-            eng.stats.wall_complete_s += self.wall
-            eng.stats.ranges += self.ranges
-            eng.stats.span_bytes += self.span_bytes
+            if self.kind == "w":
+                eng.stats.virtual_write_s += virt
+                eng.stats.wall_complete_s += self.wall
+                eng.stats.write_ranges += self.ranges
+                eng.stats.write_span_bytes += self.span_bytes
+            else:
+                eng.stats.virtual_io_s += virt
+                eng.stats.wall_complete_s += self.wall
+                eng.stats.ranges += self.ranges
+                eng.stats.span_bytes += self.span_bytes
         self.fut.set_result((self.data, virt))
 
 
@@ -241,14 +331,22 @@ class AsyncIOEngine:
     def __init__(self, store: FeatureStore, worker_budget: float = 0.3,
                  total_workers: int = 8,
                  env: HardwareEnvelope = DEFAULT_ENVELOPE,
-                 striped: bool = True, coalesce_gap: int = 8):
+                 striped: bool = True, coalesce_gap: int | str = 8,
+                 max_coalesce_gap: int = 64, amp_cap: float = 1.5):
         self.store = store
         self.env = env
         self.model = ArrayModel(store.n_shards, env)
         self.n_workers = max(1, int(round(worker_budget * total_workers)))
         self.worker_budget = worker_budget
         self.striped = striped
-        self.coalesce_gap = coalesce_gap
+        # coalesce_gap="adaptive" re-picks the gap per shard batch from the
+        # observed offset density (pick_coalesce_gap): dense hot-head batches
+        # get long runs, uniform tails stay at gap 0 instead of paying
+        # unbounded read amplification
+        self.adaptive_gap = coalesce_gap == ADAPTIVE_GAP
+        self.coalesce_gap = 0 if self.adaptive_gap else int(coalesce_gap)
+        self.max_coalesce_gap = max_coalesce_gap
+        self.amp_cap = amp_cap
         self._ssd = SSDModel(env)
         self._sq: queue.Queue = queue.Queue()       # legacy whole-batch queue
         # striped path: one submission queue per shard + a ready queue of
@@ -272,7 +370,7 @@ class AsyncIOEngine:
         ids = np.asarray(ids)
         nbytes = len(ids) * self.store.row_bytes
         if not self.striped:
-            self._sq.put((ids, out, dest, fut))
+            self._sq.put(("r", ids, out, dest, fut))
             tk = IOTicket(fut, len(ids), nbytes,
                           time.perf_counter() - t0, tag, shards=1)
             with self._lock:
@@ -301,7 +399,7 @@ class AsyncIOEngine:
         else:
             comp.pending = len(batches)
             for s, offs, d in batches:
-                self._sqs[s].put((offs, d, buf, comp))
+                self._sqs[s].put(("r", offs, (d, buf), comp))
                 self._ready.put(s)
         tk.submit_wall = time.perf_counter() - t0
         with self._lock:
@@ -312,11 +410,69 @@ class AsyncIOEngine:
             self.stats.shard_batches += len(batches)
         return tk
 
+    def submit_write(self, ids: np.ndarray, rows: np.ndarray,
+                     tag: str = "") -> IOTicket:
+        """``submit()`` mirror for the WRITE path: per-shard striped SQE
+        write batches, range-coalesced sequential writes, one aggregating
+        ticket.  Duplicate ids resolve last-writer-wins BEFORE striping, so
+        the outcome is deterministic no matter how shards reorder.  The
+        ticket resolves with ``(None, virtual_seconds)``."""
+        if not self.store.writable:
+            raise PermissionError("submit_write on a read-only FeatureStore; "
+                                  "open it with writable=True")
+        fut: Future = Future()
+        t0 = time.perf_counter()
+        ids = np.asarray(ids)
+        rows = np.asarray(rows, self.store.dtype)
+        if rows.shape != (len(ids), self.store.row_dim):
+            raise ValueError(f"rows shape {rows.shape} != "
+                             f"({len(ids)}, {self.store.row_dim})")
+        ids, rows = keep_last_writer(ids, rows)
+        nbytes = len(ids) * self.store.row_bytes
+        if not self.striped:
+            self._sq.put(("w", ids, rows, None, fut))
+            tk = IOTicket(fut, len(ids), nbytes,
+                          time.perf_counter() - t0, tag, shards=1)
+            with self._lock:
+                self.stats.write_requests += len(ids)
+                self.stats.write_bytes += nbytes
+                self.stats.wall_submit_s += tk.submit_wall
+                self.stats.write_batches += 1
+            return tk
+
+        sid, off = self.store.locate(ids)
+        comp = _ShardedCompletion(self, fut, None, 0, kind="w")
+        batches = []
+        for s in range(self.store.n_shards):
+            m = sid == s
+            if m.any():
+                batches.append((s, off[m], rows[m]))
+        tk = IOTicket(fut, len(ids), nbytes, 0.0, tag, shards=len(batches))
+        if not batches:                 # empty batch: resolve immediately
+            fut.set_result((None, 0.0))
+        else:
+            comp.pending = len(batches)
+            for s, offs, data in batches:
+                self._sqs[s].put(("w", offs, data, comp))
+                self._ready.put(s)
+        tk.submit_wall = time.perf_counter() - t0
+        with self._lock:
+            self.stats.write_requests += len(ids)
+            self.stats.write_bytes += nbytes
+            self.stats.wall_submit_s += tk.submit_wall
+            self.stats.write_batches += 1
+            self.stats.write_shard_batches += len(batches)
+        return tk
+
+    def _gap_for(self, offs: np.ndarray) -> int:
+        return (pick_coalesce_gap(offs, self.max_coalesce_gap, self.amp_cap)
+                if self.adaptive_gap else self.coalesce_gap)
+
     # -- per-shard service: sorted, range-coalesced sequential reads ------
     def _service_shard(self, shard: int, offs: np.ndarray, dest: np.ndarray,
                        buf: np.ndarray):
         mm = self.store.shards[shard]
-        order, bounds = coalesce_offsets(offs, self.coalesce_gap)
+        order, bounds = coalesce_offsets(offs, self._gap_for(offs))
         so, sd = offs[order], dest[order]
         span_rows = 0
         for lo, hi in zip(bounds[:-1], bounds[1:]):
@@ -333,6 +489,29 @@ class AsyncIOEngine:
         virt = self._ssd.range_io_time(n_ranges, span_bytes, qd)
         return virt, n_ranges, span_bytes
 
+    # -- per-shard service: sorted, range-coalesced sequential WRITES -----
+    def _service_shard_write(self, shard: int, offs: np.ndarray,
+                             rows: np.ndarray):
+        """Dirty rows sorted by offset; runs with <= gap untouched rows
+        between them become ONE sequential write stream (the untouched gap
+        rows ride along read-modify-write style, bounded write
+        amplification buying sequential NAND programs).  Only the requested
+        offsets are actually stored — the span shows up in the timing
+        model, never in the data."""
+        mm = self.store.shards[shard]
+        order, bounds = coalesce_offsets(offs, self._gap_for(offs))
+        so, sr = offs[order], rows[order]
+        span_rows = 0
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            start, end = int(so[lo]), int(so[hi - 1]) + 1
+            mm[so[lo:hi]] = sr[lo:hi]   # offsets unique post-dedupe
+            span_rows += end - start
+        n_ranges = len(bounds) - 1
+        span_bytes = span_rows * self.store.row_bytes
+        qd = int(256 * min(1.0, self.worker_budget / 0.3))
+        virt = self._ssd.range_write_time(n_ranges, span_bytes, qd)
+        return virt, n_ranges, span_bytes
+
     # -- completion handling (worker pool = the paper's CQ-polling kernel) -
     def _worker(self):
         while not self._stop:
@@ -341,13 +520,17 @@ class AsyncIOEngine:
             except queue.Empty:
                 continue
             try:
-                offs, d, buf, comp = self._sqs[s].get_nowait()
+                kind, offs, payload, comp = self._sqs[s].get_nowait()
             except queue.Empty:         # pragma: no cover - token per entry
                 self._ready.task_done()
                 continue
             try:
                 t0 = time.perf_counter()
-                out = self._service_shard(s, offs, d, buf)
+                if kind == "w":
+                    out = self._service_shard_write(s, offs, payload)
+                else:
+                    d, buf = payload
+                    out = self._service_shard(s, offs, d, buf)
                 comp.shard_done(*out, time.perf_counter() - t0)
             except Exception as e:      # pragma: no cover
                 comp.shard_fail(e)
@@ -359,25 +542,38 @@ class AsyncIOEngine:
     def _worker_legacy(self):
         while not self._stop:
             try:
-                ids, out, dest, fut = self._sq.get(timeout=0.1)
+                kind, ids, a, b, fut = self._sq.get(timeout=0.1)
             except queue.Empty:
                 continue
             try:
                 t0 = time.perf_counter()
-                data = self.store.read_rows(ids)
-                if out is not None:
-                    out[dest if dest is not None else slice(0, len(ids))] = data
-                wall = time.perf_counter() - t0
                 # virtual time under the paper's hardware envelope; the
                 # worker budget bounds in-flight NVMe commands exactly like
                 # the paper's thread-block count does (32 blocks ~ 30% of
                 # cores saturate 12 SSDs; below that the array starves)
                 qd = int(256 * self.store.n_shards * min(1.0, self.worker_budget / 0.3))
-                virt = self.model.read_time(len(ids), self.store.row_bytes, qd)
-                with self._lock:
-                    self.stats.virtual_io_s += virt
-                    self.stats.wall_complete_s += wall
-                fut.set_result((data if out is None else None, virt))
+                if kind == "w":
+                    # whole-batch serial write, 4K-random write cost model
+                    # (ids were deduped last-writer-wins at submit time)
+                    self.store.write_rows(ids, a, dedupe=False)
+                    virt = self.model.write_time(len(ids),
+                                                 self.store.row_bytes, qd)
+                    with self._lock:
+                        self.stats.virtual_write_s += virt
+                        self.stats.wall_complete_s += time.perf_counter() - t0
+                    fut.set_result((None, virt))
+                else:
+                    out, dest = a, b
+                    data = self.store.read_rows(ids)
+                    if out is not None:
+                        out[dest if dest is not None
+                            else slice(0, len(ids))] = data
+                    virt = self.model.read_time(len(ids),
+                                                self.store.row_bytes, qd)
+                    with self._lock:
+                        self.stats.virtual_io_s += virt
+                        self.stats.wall_complete_s += time.perf_counter() - t0
+                    fut.set_result((data if out is None else None, virt))
             except Exception as e:      # pragma: no cover
                 fut.set_exception(e)
             finally:
@@ -474,6 +670,29 @@ class SyncIOEngine:
         return IOTicket(fut, len(ids), len(ids) * self.store.row_bytes,
                         time.perf_counter() - t0, tag, shards=1)
 
+    def submit_write(self, ids: np.ndarray, rows: np.ndarray,
+                     tag: str = "") -> IOTicket:
+        """Coupled write: blocks until the rows land (the warp holds its
+        slot for the whole program/flush, collapsing queue depth)."""
+        t0 = time.perf_counter()
+        ids = np.asarray(ids)
+        rows = np.asarray(rows, self.store.dtype)
+        ids, rows = keep_last_writer(ids, rows)
+        self.store.write_rows(ids, rows, dedupe=False)
+        virt = self.model.write_time(len(ids), self.store.row_bytes,
+                                     int(256 * self.store.n_shards * 0.6))
+        virt += self._staging_virt(len(ids))
+        nbytes = len(ids) * self.store.row_bytes
+        self.stats.write_requests += len(ids)
+        self.stats.write_bytes += nbytes
+        self.stats.virtual_write_s += virt
+        self.stats.wall_complete_s += time.perf_counter() - t0
+        self.stats.write_batches += 1
+        fut: Future = Future()
+        fut.set_result((None, virt))
+        return IOTicket(fut, len(ids), nbytes,
+                        time.perf_counter() - t0, tag, shards=1)
+
 
 class CPUManagedEngine(SyncIOEngine):
     """Ginex/MariusGNN-style: single CPU thread stages features through host
@@ -486,11 +705,12 @@ class CPUManagedEngine(SyncIOEngine):
 
 def make_engine(mode: str, store: FeatureStore, worker_budget: float = 0.3,
                 env: HardwareEnvelope = DEFAULT_ENVELOPE,
-                striped: bool = True, coalesce_gap: int = 8):
+                striped: bool = True, coalesce_gap: int | str = 8):
     """Engine for an ablation mode (shared by trainer and server):
     ``cpu`` -> CPUManagedEngine, ``gids`` -> SyncIOEngine, anything
     Helios-flavoured -> AsyncIOEngine (``striped``/``coalesce_gap`` tune
-    the per-shard SQ read path; ``striped=False`` is the legacy
+    the per-shard SQ read path; ``coalesce_gap="adaptive"`` re-picks the
+    gap per batch from offset density; ``striped=False`` is the legacy
     single-queue ablation)."""
     if mode == "cpu":
         return CPUManagedEngine(store, env=env)

@@ -18,6 +18,13 @@ Policies:
   * OracleOfflinePolicy   — Ginex-style offline upper bound: it is handed
     the full future access trace and places by the access counts of the
     *upcoming* window at every window boundary.
+  * BeladyOraclePolicy    — Belady's MIN per-access bound: re-places before
+    every batch by exact next-use distance; upper-bounds the windowed
+    oracle and measures the headroom its cadence leaves.
+
+Policies also see the write-back dirty bitmap at placement time
+(``placement_scores(loc, dirty=...)``): demoting a dirty row costs a flush
+write, so the online policy boosts dirty residents by ``write_bias``.
 """
 from __future__ import annotations
 
@@ -69,9 +76,12 @@ class CachePolicy(Protocol):
         """Should the cache re-derive placement now?"""
         ...
 
-    def placement_scores(self, loc: np.ndarray | None = None):
+    def placement_scores(self, loc: np.ndarray | None = None,
+                         dirty: np.ndarray | None = None):
         """Current scores (``None`` = keep placement).  ``loc`` is the live
-        location table so the policy can favour residents (hysteresis)."""
+        location table so the policy can favour residents (hysteresis);
+        ``dirty`` is the write-back dirty bitmap so demoting a row that
+        costs a flush write needs a clearly hotter challenger."""
         ...
 
     def refreshed(self) -> None:
@@ -103,7 +113,8 @@ class StaticPresamplePolicy:
     def refresh_due(self) -> bool:
         return False
 
-    def placement_scores(self, loc: np.ndarray | None = None) -> np.ndarray:
+    def placement_scores(self, loc: np.ndarray | None = None,
+                         dirty: np.ndarray | None = None) -> np.ndarray:
         return self._scores.copy()
 
     def refreshed(self) -> None:
@@ -129,7 +140,7 @@ class OnlineDecayPolicy:
 
     def __init__(self, n_rows: int, init_scores: np.ndarray | None = None,
                  half_life: float = 16.0, refresh_every: int = 8,
-                 hysteresis: float = 0.1):
+                 hysteresis: float = 0.1, write_bias: float = 0.25):
         if refresh_every < 1:
             raise ValueError("refresh_every must be >= 1")
         self._scores = (np.zeros(n_rows, np.float64) if init_scores is None
@@ -139,6 +150,7 @@ class OnlineDecayPolicy:
         self.decay = 0.5 ** (1.0 / half_life)
         self.refresh_every = refresh_every
         self.hysteresis = hysteresis
+        self.write_bias = write_bias
         self._since_refresh = 0
         # score snapshot at the last prefetch check: the delta against it is
         # the score TREND that predicts rows turning hot
@@ -157,11 +169,17 @@ class OnlineDecayPolicy:
     def refresh_due(self) -> bool:
         return self._since_refresh >= self.refresh_every
 
-    def placement_scores(self, loc: np.ndarray | None = None) -> np.ndarray:
+    def placement_scores(self, loc: np.ndarray | None = None,
+                         dirty: np.ndarray | None = None) -> np.ndarray:
         with self._lock:
             s = self._scores.copy()
         if loc is not None and self.hysteresis:
             s[loc < 2] *= 1.0 + self.hysteresis
+        if dirty is not None and self.write_bias:
+            # dirty-aware demotion: evicting a dirty row costs a flush
+            # write a clean eviction does not, so a challenger must beat a
+            # dirty incumbent by an extra margin before migration pays
+            s[dirty] *= 1.0 + self.write_bias
         return s
 
     def refreshed(self) -> None:
@@ -220,7 +238,8 @@ class OracleOfflinePolicy:
     def refresh_due(self) -> bool:
         return self._due and self._cursor < len(self.trace)
 
-    def placement_scores(self, loc: np.ndarray | None = None):
+    def placement_scores(self, loc: np.ndarray | None = None,
+                         dirty: np.ndarray | None = None):
         counts = self._window_counts(self._cursor)
         return counts if counts.any() else None
 
@@ -237,6 +256,89 @@ class OracleOfflinePolicy:
         if not len(cand):
             return cand
         return cand[np.argsort(-counts[cand], kind="stable")[:k]]
+
+
+class BeladyOraclePolicy:
+    """Belady's MIN as a placement policy: the exact per-access upper bound.
+
+    Where ``OracleOfflinePolicy`` summarizes the next ``window`` batches
+    into counts at window boundaries, Belady re-places before EVERY batch
+    by next-use distance — the rows used soonest are the hottest, rows
+    never used again score zero.  For a cache re-ranked each step this is
+    the provably optimal eviction order, so its hit rate upper-bounds the
+    windowed oracle (and every online policy) on the same trace; the gap
+    between the two oracles is the headroom the windowed cadence leaves on
+    the table.
+
+    Next-use lookup is a CSR over per-row occurrence lists with a cursor
+    that only moves forward, so the whole trace costs O(total accesses)
+    amortized, not O(n_rows x n_batches).
+    """
+
+    name = "belady"
+
+    def __init__(self, n_rows: int, trace):
+        self.n_rows = n_rows
+        self.trace = [np.unique(np.asarray(t)) for t in trace]
+        t_idx = np.concatenate([np.full(len(u), t, np.int64)
+                                for t, u in enumerate(self.trace)]) \
+            if self.trace else np.empty(0, np.int64)
+        r_idx = (np.concatenate(self.trace) if self.trace
+                 else np.empty(0, np.int64))
+        order = np.lexsort((t_idx, r_idx))
+        self._occ_t = t_idx[order]                      # batch index, sorted
+        r_sorted = r_idx[order]                         # by (row, batch)
+        self._start = np.searchsorted(r_sorted, np.arange(n_rows))
+        self._end = np.searchsorted(r_sorted, np.arange(n_rows), side="right")
+        self._ptr = self._start.copy()                  # per-row cursor
+        self._cursor = 0
+        self._lock = threading.Lock()
+
+    def _next_use(self) -> np.ndarray:
+        """Per-row distance (in batches) to the next access at the current
+        cursor; +inf when the row is never used again.  Pointers advance
+        monotonically — each occurrence is skipped at most once, ever."""
+        c = self._cursor
+        ptr, end, occ = self._ptr, self._end, self._occ_t
+        n = len(occ)
+        if n == 0:                      # empty trace: nothing is ever used
+            return np.full(self.n_rows, np.inf)
+        while True:
+            lag = (ptr < end) & (occ[np.minimum(ptr, n - 1)] < c)
+            if not lag.any():
+                break
+            ptr[lag] += 1
+        nxt = np.full(self.n_rows, np.inf)
+        live = ptr < end
+        nxt[live] = occ[np.minimum(ptr, n - 1)][live] - c
+        return nxt
+
+    def initial_scores(self) -> np.ndarray:
+        return 1.0 / (1.0 + self._next_use())
+
+    def record(self, ids: np.ndarray) -> None:
+        with self._lock:
+            self._cursor += 1
+
+    def refresh_due(self) -> bool:
+        return self._cursor < len(self.trace)           # re-place EVERY batch
+
+    def placement_scores(self, loc: np.ndarray | None = None,
+                         dirty: np.ndarray | None = None):
+        with self._lock:
+            return 1.0 / (1.0 + self._next_use())
+
+    def refreshed(self) -> None:
+        pass
+
+    def prefetch_candidates(self, loc: np.ndarray, k: int) -> np.ndarray:
+        """Storage rows with a finite next use, soonest first."""
+        with self._lock:
+            nxt = self._next_use()
+        cand = np.where(np.isfinite(nxt) & (loc == 2))[0]
+        if not len(cand):
+            return cand
+        return cand[np.argsort(nxt[cand], kind="stable")[:k]]
 
 
 def make_policy(kind: str, n_rows: int,
@@ -256,5 +358,9 @@ def make_policy(kind: str, n_rows: int,
         if trace is None:
             raise ValueError("oracle policy requires the full access trace")
         return OracleOfflinePolicy(n_rows, trace, window=refresh_every)
+    if kind == "belady":
+        if trace is None:
+            raise ValueError("belady policy requires the full access trace")
+        return BeladyOraclePolicy(n_rows, trace)
     raise ValueError(f"unknown cache policy {kind!r} "
-                     "(expected static | online | oracle)")
+                     "(expected static | online | oracle | belady)")

@@ -21,6 +21,8 @@ class HardwareEnvelope:
     # Intel P5510-class NVMe (paper: 12x 3.84TB)
     ssd_seq_bw: float = 6.5e9          # bytes/s sequential read per SSD
     ssd_4k_iops: float = 700e3         # 4KiB random read IOPS per SSD
+    ssd_seq_write_bw: float = 3.4e9    # bytes/s sequential write per SSD
+    ssd_4k_write_iops: float = 200e3   # 4KiB random write IOPS per SSD
     ssd_min_io: int = 512              # bytes, min access granularity
     ssd_latency: float = 90e-6         # seconds, per-IO latency
     nvme_queue_depth: int = 1024       # per SSD
@@ -79,6 +81,37 @@ class SSDModel:
         t_stream = nbytes / self.env.ssd_seq_bw
         return self.env.ssd_latency + t_cmd + t_stream
 
+    def write_io_time(self, n_requests: int, bytes_per_request: int,
+                      queue_depth: int) -> float:
+        """Virtual seconds for n random WRITES: same queue-depth/Little's-law
+        shape as ``io_time`` but against the (lower) write ceilings — NAND
+        program cost makes small random writes ~3.5x slower than reads."""
+        if n_requests == 0:
+            return 0.0
+        size = max(bytes_per_request, self.env.ssd_min_io)
+        max_iops = min(self.env.ssd_4k_write_iops,
+                       self.env.ssd_seq_write_bw / size)
+        qd_frac = min(1.0, queue_depth / 256.0)
+        service = n_requests / max(max_iops * qd_frac, 1.0)
+        return self.env.ssd_latency + service
+
+    def range_write_time(self, n_ranges: int, total_bytes: int,
+                         queue_depth: int) -> float:
+        """Virtual seconds for ``n_ranges`` SEQUENTIAL range writes totalling
+        ``total_bytes``: one command issue per range on the write-IOPS path,
+        payload streamed at sequential WRITE bandwidth.  Coalesced dirty-row
+        runs approach the sequential-write ceiling instead of the random
+        write-IOPS ceiling — the same lever as ``range_io_time``, applied to
+        the flush path."""
+        if n_ranges == 0:
+            return 0.0
+        nbytes = max(total_bytes, n_ranges * self.env.ssd_min_io)
+        qd_frac = min(1.0, queue_depth / 256.0)
+        iops = self.env.ssd_4k_write_iops * qd_frac
+        t_cmd = n_ranges / max(iops, 1.0)
+        t_stream = nbytes / self.env.ssd_seq_write_bw
+        return self.env.ssd_latency + t_cmd + t_stream
+
 
 @dataclass
 class ArrayModel:
@@ -94,6 +127,18 @@ class ArrayModel:
                             queue_depth_total // max(self.n_ssds, 1))
         # transfers also cross PCIe (bounded by link bw)
         t_pcie = n_requests * max(bytes_per_request, self.env.ssd_min_io) / self.env.pcie_bw
+        return max(t_ssd, t_pcie)
+
+    def write_time(self, n_requests: int, bytes_per_request: int,
+                   queue_depth_total: int) -> float:
+        """Random-write mirror of ``read_time``: requests stripe round-robin
+        over the array's submission queues, payload crosses PCIe host->SSD."""
+        ssd = SSDModel(self.env)
+        per = math.ceil(n_requests / max(self.n_ssds, 1))
+        t_ssd = ssd.write_io_time(per, bytes_per_request,
+                                  queue_depth_total // max(self.n_ssds, 1))
+        t_pcie = n_requests * max(bytes_per_request,
+                                  self.env.ssd_min_io) / self.env.pcie_bw
         return max(t_ssd, t_pcie)
 
     def peak_bw(self, bytes_per_request: int) -> float:

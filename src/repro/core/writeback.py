@@ -1,0 +1,98 @@
+"""Write-back bookkeeping for mutable cache tiers.
+
+The read-only cache could treat eviction as free because a cached row was
+always a *copy* of storage.  The moment rows mutate in place (trainable
+embeddings, MoE expert state), a cached row can be the ONLY current copy:
+``MutableTierTable`` tracks which resident rows are dirty (ahead of
+storage) and a monotonically-increasing per-row version, so the cache can
+
+  * flush dirty rows through one batched ``submit_write`` ticket before a
+    demotion drops the tier copy (flush-on-demote),
+  * expose a ``flush()`` barrier for epoch/checkpoint boundaries, and
+  * let placement policies bias demotion away from dirty rows (a dirty
+    demotion costs a storage write a clean demotion does not).
+
+Thread-safe: the cache's refresh lock serializes structural changes, but
+gathers and pipeline operators may inspect dirty state concurrently.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class WriteResult:
+    """One ``write_planned()``: where the written rows landed."""
+    rows: int = 0                       # unique rows written (last-writer-wins)
+    device_rows: int = 0                # updated in the HBM tier
+    host_rows: int = 0                  # updated in the DRAM tier
+    through_rows: int = 0               # written straight to storage
+    virtual_s: float = 0.0              # storage write-ticket time
+
+
+@dataclass
+class FlushResult:
+    """One ``flush()`` barrier (or flush-on-demote leg)."""
+    rows: int = 0
+    bytes: int = 0
+    virtual_s: float = 0.0
+
+
+class MutableTierTable:
+    """Per-row dirty bits + versions for the mutable cache tiers.
+
+    A row is *dirty* when its freshest value lives in a cache tier and
+    storage is stale; versions count successful writes per row, so
+    read-your-writes violations show up as version regressions in tests.
+    """
+
+    def __init__(self, n_rows: int):
+        self.n_rows = n_rows
+        self._dirty = np.zeros(n_rows, bool)
+        self._version = np.zeros(n_rows, np.int64)
+        self._lock = threading.Lock()
+
+    # -- mutation (called under the cache's refresh lock) -----------------
+    def mark_dirty(self, ids: np.ndarray) -> None:
+        if len(ids):
+            with self._lock:
+                self._dirty[ids] = True
+                np.add.at(self._version, ids, 1)
+
+    def bump_version(self, ids: np.ndarray) -> None:
+        """Version bump without dirtying — write-through rows: storage is
+        current, but the write still happened."""
+        if len(ids):
+            with self._lock:
+                np.add.at(self._version, ids, 1)
+
+    def clear_dirty(self, ids: np.ndarray) -> None:
+        if len(ids):
+            with self._lock:
+                self._dirty[ids] = False
+
+    # -- inspection -------------------------------------------------------
+    def is_dirty(self, ids: np.ndarray) -> np.ndarray:
+        with self._lock:
+            return self._dirty[ids]
+
+    def dirty_ids(self) -> np.ndarray:
+        with self._lock:
+            return np.where(self._dirty)[0]
+
+    @property
+    def n_dirty(self) -> int:
+        with self._lock:
+            return int(self._dirty.sum())
+
+    def dirty_mask(self) -> np.ndarray:
+        """Snapshot of the dirty bitmap (copy: safe to hand to policies)."""
+        with self._lock:
+            return self._dirty.copy()
+
+    def versions(self, ids: np.ndarray) -> np.ndarray:
+        with self._lock:
+            return self._version[ids].copy()

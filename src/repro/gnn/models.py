@@ -102,10 +102,24 @@ def make_gnn_infer_step(model: str, batch_size: int):
     return step
 
 
-def make_gnn_train_step(model: str, optimizer, batch_size: int):
+def make_gnn_train_step(model: str, optimizer, batch_size: int,
+                        embedding_grads: bool = False):
+    """Jit'd training step.  With ``embedding_grads=True`` the step also
+    differentiates w.r.t. the INPUT features and returns the feature
+    gradient as a third output — the trainer's write path applies it to the
+    trainable embedding rows and pushes them back through the cache."""
     @jax.jit
     def step(state, feats, src, dst, emask, labels):
         blocks = [(s, d, m) for s, d, m in zip(src, dst, emask)]
+        if embedding_grads:
+            (loss, acc), (pgrads, fgrad) = jax.value_and_grad(
+                lambda p, f: gnn_loss(p, f, blocks, labels, batch_size,
+                                      model),
+                argnums=(0, 1), has_aux=True)(state["params"], feats)
+            new_p, new_opt = optimizer.update(pgrads, state["opt"],
+                                              state["params"])
+            return ({"params": new_p, "opt": new_opt},
+                    {"loss": loss, "acc": acc}, fgrad)
         (loss, acc), grads = jax.value_and_grad(
             lambda p: gnn_loss(p, feats, blocks, labels, batch_size, model),
             has_aux=True)(state["params"])

@@ -16,6 +16,7 @@ Wires together every Helios component:
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -56,7 +57,36 @@ class TrainerConfig:
     policy_half_life: float = 16.0
     policy_hysteresis: float = 0.1
     lr: float = 1e-3
+    # trainable embeddings (the write-path workload): gradient-updated
+    # feature rows ride the cache's write-back tiers; requires a store
+    # opened with writable=True
+    train_embeddings: bool = False
+    embedding_lr: float = 0.05
+    embedding_flush_every: int = 0  # batches between flush barriers
+                                   # (0 = flush only at epoch end / demote)
+    write_policy: str = "writeback"  # writeback | writethrough (ablation)
     seed: int = 0
+
+
+class TrainableEmbeddingTable:
+    """Trainable node embeddings living in the FeatureStore.
+
+    The feature rows ARE the learnable parameters (MariusGNN-style
+    out-of-core embedding training): each step applies the SGD delta
+    ``-lr * dL/dfeats`` through ``HeteroCache.apply_delta`` — a
+    read-modify-write against the LIVE row value, so concurrent pipeline
+    batches that touch the same hot rows compose their updates instead of
+    overwriting each other with stale absolute values.  Hot rows mutate in
+    their cache tier and ride flush-on-demote; cold rows write through.
+    The epoch-boundary ``flush()`` barrier makes storage authoritative for
+    checkpointing."""
+
+    def __init__(self, cache: HeteroCache, lr: float):
+        self.cache = cache
+        self.lr = lr
+
+    def apply_grads(self, ids: np.ndarray, grads: np.ndarray):
+        return self.cache.apply_delta(ids, -self.lr * np.asarray(grads))
 
 
 class OutOfCoreGNNTrainer:
@@ -64,6 +94,10 @@ class OutOfCoreGNNTrainer:
                  cfg: TrainerConfig | None = None):
         cfg = cfg if cfg is not None else TrainerConfig()
         self.g, self.store, self.cfg = graph, store, cfg
+        if cfg.train_embeddings and not store.writable:
+            raise ValueError("train_embeddings needs a FeatureStore opened "
+                             "with writable=True (the embedding rows are "
+                             "the parameters)")
         self.sampler = NeighborSampler(graph, cfg.fanouts, cfg.seed)
 
         # --- IO engine per mode ------------------------------------------
@@ -84,7 +118,8 @@ class OutOfCoreGNNTrainer:
                              half_life=cfg.policy_half_life,
                              hysteresis=cfg.policy_hysteresis)
         self.cache = HeteroCache(store, None, dev_rows, host_rows, self.io,
-                                 policy=policy)
+                                 policy=policy,
+                                 write_policy=cfg.write_policy)
 
         # --- model + optimizer -------------------------------------------
         key = jax.random.key(cfg.seed)
@@ -92,8 +127,18 @@ class OutOfCoreGNNTrainer:
                                       cfg.hidden, graph.n_classes)
         self.opt = adamw(cfg.lr)
         self.state = {"params": self.params, "opt": self.opt.init(self.params)}
-        self.step_fn = make_gnn_train_step(cfg.model, self.opt, cfg.batch_size)
+        self.step_fn = make_gnn_train_step(
+            cfg.model, self.opt, cfg.batch_size,
+            embedding_grads=cfg.train_embeddings)
+        self.embeddings = (TrainableEmbeddingTable(self.cache,
+                                                   cfg.embedding_lr)
+                           if cfg.train_embeddings else None)
         self.metrics_log = []
+        # double-buffered prefetch: the ticket issued for batch i stays in
+        # flight until batch i+1's operator completes it
+        self._pf_pending = None
+        self._pf_lock = threading.Lock()
+        self._wb_batches = 0
 
     # -----------------------------------------------------------------
     def _operators(self):
@@ -122,10 +167,17 @@ class OutOfCoreGNNTrainer:
             ctx["refresh"] = self.cache.maybe_refresh()
 
         def op_prefetch(ctx):
-            # policy-driven prefetch on the io resource: rows the score
-            # trend predicts will turn hot are pulled into the cache before
-            # any batch requests them (hide the first miss)
-            ctx["prefetch"] = self.cache.maybe_prefetch(cfg.prefetch_rows)
+            # policy-driven prefetch on the io resource, double-buffered:
+            # this batch ISSUES its admission ticket without waiting and
+            # COMPLETES the ticket the previous batch left in flight, so
+            # the admission read hides under a whole batch of other work
+            # instead of blocking inside the operator
+            with self._pf_lock:
+                prev, self._pf_pending = (
+                    self._pf_pending,
+                    self.cache.maybe_prefetch(cfg.prefetch_rows, wait=False))
+            if prev is not None:
+                ctx["prefetch"] = self.cache.complete_prefetch(prev)
 
         def op_batch_build(ctx):
             mb = ctx["mb"]
@@ -139,10 +191,33 @@ class OutOfCoreGNNTrainer:
 
         def op_train(ctx):
             src, dst, em, labels = ctx["tensors"]
-            self.state, m = self.step_fn(self.state, ctx["feats"], src, dst,
-                                         em, labels)
+            if cfg.train_embeddings:
+                self.state, m, fgrad = self.step_fn(self.state, ctx["feats"],
+                                                    src, dst, em, labels)
+                ctx["feat_grad"] = np.asarray(fgrad)
+            else:
+                self.state, m = self.step_fn(self.state, ctx["feats"], src,
+                                             dst, em, labels)
             ctx["metrics"] = jax.tree.map(float, m)
             self.metrics_log.append(ctx["metrics"])
+
+        def op_embedding_writeback(ctx):
+            # gradient-updated embedding rows ride the cache write path on
+            # the io resource: resident rows mutate in their tier and turn
+            # dirty (flush-on-demote / epoch flush covers storage), cold
+            # rows write through — MariusGNN's trainable-embedding workload
+            # on top of Helios's IO stack
+            mb = ctx["mb"]
+            mask = mb.node_mask
+            res = self.embeddings.apply_grads(mb.nodes[mask],
+                                              ctx["feat_grad"][mask])
+            ctx["writeback"] = res
+            if cfg.embedding_flush_every > 0:
+                with self._pf_lock:
+                    self._wb_batches += 1
+                    due = self._wb_batches % cfg.embedding_flush_every == 0
+                if due:
+                    ctx["wb_flush"] = self.cache.flush()
 
         # virtual costs under the paper envelope
         rb = self.store.row_bytes
@@ -182,6 +257,17 @@ class OutOfCoreGNNTrainer:
             r = ctx.get("prefetch")
             return r.virtual_s if r is not None else 0.0
 
+        def vc_writeback(ctx):
+            r = ctx.get("writeback")
+            if r is None:
+                return 0.0
+            # tier writes move bytes over HBM/DRAM; storage writes cost
+            # the virtual seconds their ticket actually resolved with
+            virt = (r.device_rows * rb / env.hbm_bw
+                    + r.host_rows * rb / env.dram_bw + r.virtual_s)
+            fl = ctx.get("wb_flush")
+            return virt + (fl.virtual_s if fl is not None else 0.0)
+
         def vc_h2d(ctx):
             # device-managed paths (Helios/GIDS) land storage + host rows in
             # device memory directly (GPU-initiated DMA / UVA), so batch
@@ -216,6 +302,10 @@ class OutOfCoreGNNTrainer:
         if cfg.prefetch_rows > 0:
             plan.insert(5, Operator("prefetch", op_prefetch, "io",
                                     ("io_complete",), vc_prefetch))
+        if cfg.train_embeddings:
+            plan.append(Operator("embedding_writeback",
+                                 op_embedding_writeback, "io", ("train",),
+                                 vc_writeback))
         return plan
 
     # -----------------------------------------------------------------
@@ -240,6 +330,14 @@ class OutOfCoreGNNTrainer:
 
         out = pipe.run(make_ctx, n_batches)
         pipe.close()
+        # land the last double-buffered prefetch ticket left in flight
+        with self._pf_lock:
+            pf, self._pf_pending = self._pf_pending, None
+        if pf is not None:
+            self.cache.complete_prefetch(pf)
+        # epoch barrier: every dirty embedding row becomes durable on
+        # storage through ONE batched (striped, coalesced) write ticket
+        epoch_flush = (self.cache.flush() if cfg.train_embeddings else None)
         out["cache"] = {
             "hit_rate": self.cache.stats.hit_rate,
             "device_hits": self.cache.stats.device_hits,
@@ -258,7 +356,22 @@ class OutOfCoreGNNTrainer:
                      "bytes": self.io.stats.bytes,
                      "virtual_s": self.io.stats.virtual_io_s,
                      "ranges": self.io.stats.ranges,
-                     "span_bytes": self.io.stats.span_bytes}
+                     "span_bytes": self.io.stats.span_bytes,
+                     "write_requests": self.io.stats.write_requests,
+                     "write_bytes": self.io.stats.write_bytes,
+                     "virtual_write_s": self.io.stats.virtual_write_s}
+        if cfg.train_embeddings:
+            cs = self.cache.stats
+            out["writeback"] = {
+                "written_rows": cs.written_rows,
+                "write_through_rows": cs.write_through_rows,
+                "flushed_rows": cs.flushed_rows,
+                "flushes": cs.flushes,
+                "virtual_write_s": cs.virtual_write_s,
+                "virtual_flush_s": cs.virtual_flush_s,
+                "epoch_flush_rows": epoch_flush.rows,
+                "dirty_after_flush": self.cache.n_dirty,
+            }
         out["loss_first"] = self.metrics_log[0]["loss"] if self.metrics_log else None
         out["loss_last"] = self.metrics_log[-1]["loss"] if self.metrics_log else None
         return out

@@ -329,6 +329,113 @@ def test_trainer_prefetch_operator_reduces_misses(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Belady per-access oracle
+# ---------------------------------------------------------------------------
+
+def test_belady_scores_rank_by_next_use():
+    from repro.core.policy import BeladyOraclePolicy
+    trace = [np.array([3, 5]), np.array([5]), np.array([1])]
+    pol = BeladyOraclePolicy(8, trace)
+    s = pol.initial_scores()
+    # next use: row 3 & 5 at batch 0 (score 1), row 1 at batch 2, rest never
+    assert s[3] == s[5] == 1.0
+    assert 0 < s[1] < 1.0
+    assert s[0] == s[2] == 0.0
+    pol.record(trace[0])                      # cursor -> 1
+    s = pol.placement_scores()
+    assert s[5] == 1.0                        # row 5 used again at batch 1
+    assert s[3] == 0.0                        # row 3 never used again
+    loc = np.full(8, 2, np.int8)
+    assert list(pol.prefetch_candidates(loc, 8)) == [5, 1]  # soonest first
+    pol.record(trace[1])
+    pol.record(trace[2])
+    assert not pol.refresh_due()              # trace exhausted
+
+
+def test_belady_requires_trace():
+    with pytest.raises(ValueError):
+        make_policy("belady", 8)
+
+
+def test_belady_empty_trace_scores_zero():
+    pol = make_policy("belady", 8, trace=[])
+    np.testing.assert_array_equal(pol.initial_scores(), np.zeros(8))
+    np.testing.assert_array_equal(pol.placement_scores(), np.zeros(8))
+    assert not pol.refresh_due()
+    assert len(pol.prefetch_candidates(np.full(8, 2, np.int8), 4)) == 0
+
+
+def test_belady_upper_bounds_windowed_oracle(store):
+    """Acceptance: the per-access Belady oracle's hit rate upper-bounds the
+    windowed OracleOfflinePolicy on the same drifting trace — the windowed
+    cadence can only lose information."""
+    rng = np.random.default_rng(1)
+    base = rng.permutation(N_ROWS)
+    p = 1.0 / (np.arange(N_ROWS) + 1.0) ** 1.2
+    p /= p.sum()
+    trace = [np.roll(base, (t // 6) * 400)[
+        rng.choice(N_ROWS, size=256, p=p)] for t in range(24)]
+    hit = {}
+    for kind in ("oracle", "belady"):
+        policy = make_policy(kind, N_ROWS, trace=trace, refresh_every=6)
+        cache = _cache(store, policy, dev=50, host=100)
+        for ids in trace:
+            cache.complete_planned(cache.submit_planned(ids))
+            cache.maybe_refresh()
+        hit[kind] = cache.stats.hit_rate
+        cache.close()
+    assert hit["belady"] >= hit["oracle"]
+
+
+# ---------------------------------------------------------------------------
+# dirty-aware demotion scores
+# ---------------------------------------------------------------------------
+
+def test_online_write_bias_boosts_dirty_residents():
+    pol = OnlineDecayPolicy(4, refresh_every=1, hysteresis=0.0,
+                            write_bias=0.5)
+    pol.record(np.array([0, 1, 2, 3]))
+    loc = np.array([1, 1, 2, 2], np.int8)
+    dirty = np.array([True, False, False, False])
+    s = pol.placement_scores(loc, dirty=dirty)
+    # equal access counts: the dirty resident outranks the clean one by
+    # exactly the write bias (its demotion costs a flush write)
+    assert s[0] == pytest.approx(1.5 * s[1])
+    assert s[1] == s[2] == s[3]
+    # without the bitmap behavior is unchanged
+    s = pol.placement_scores(loc)
+    assert s[0] == s[1]
+
+
+def test_dirty_rows_survive_refresh_pressure(tmp_path):
+    """End to end: with write_bias, a dirty resident row under mild score
+    pressure stays cached (no flush), while with bias 0 it demotes."""
+    wstore = FeatureStore(str(tmp_path / "wb"), n_rows=64, row_dim=4,
+                          n_shards=2, create=True, rng_seed=0, writable=True)
+    kept = {}
+    for bias in (0.0, 10.0):
+        pol = OnlineDecayPolicy(64, refresh_every=1, hysteresis=0.0,
+                                write_bias=bias)
+        cache = HeteroCache(wstore, None, 0, 8,
+                            io_engine=SyncIOEngine(wstore), policy=pol)
+        # establish residents 0..7, then dirty them
+        for _ in range(4):
+            cache.gather(np.arange(8))
+            cache.maybe_refresh()
+        assert (cache.loc[np.arange(8)] == 1).all()
+        cache.write_planned(np.arange(8),
+                            np.ones((8, 4), np.float32))
+        # challengers 8..15 get marginally hotter access counts
+        for _ in range(6):
+            cache.gather(np.arange(8, 16))
+            cache.maybe_refresh()
+        kept[bias] = int((cache.loc[np.arange(8)] == 1).sum())
+        cache.flush()
+        cache.close()
+    assert kept[10.0] > kept[0.0]             # bias kept dirty rows resident
+
+
+# ---------------------------------------------------------------------------
 # end-to-end: drifting hot set (benchmark acceptance, scaled down)
 # ---------------------------------------------------------------------------
 

@@ -151,7 +151,7 @@ def _prop_engine(gap):
 
 @given(ids=hnp.arrays(np.int64, st.integers(0, 300),
                       elements=st.integers(0, 95)),
-       gap=st.sampled_from([0, 1, 7, 200]))
+       gap=st.sampled_from([0, 1, 7, 200, "adaptive"]))
 @settings(**SET)
 def test_striped_coalesced_gather_matches_read_rows(ids, gap):
     """The striped + range-coalesced read path is byte-identical to the
@@ -167,6 +167,105 @@ def test_striped_coalesced_gather_matches_read_rows(ids, gap):
     out = np.zeros((len(ids) + 2, store.row_dim), store.dtype)
     eng.submit(ids, out, np.arange(len(ids)) + 2).wait()
     np.testing.assert_array_equal(out[2:], store.read_rows(ids))
+
+
+_WB_STORE = None
+_WB_ENGINES = {}
+
+
+def _wb_store():
+    """Tiny WRITABLE feature store shared across hypothesis examples."""
+    global _WB_STORE
+    if _WB_STORE is None:
+        import tempfile
+        from repro.core.iostack import FeatureStore
+        _WB_STORE = FeatureStore(tempfile.mkdtemp(prefix="prop_wb_"),
+                                 n_rows=96, row_dim=4, n_shards=3,
+                                 create=True, rng_seed=7, writable=True)
+    return _WB_STORE
+
+
+def _wb_engine(mode):
+    if mode not in _WB_ENGINES:
+        from repro.core.iostack import (AsyncIOEngine, CPUManagedEngine,
+                                        SyncIOEngine)
+        _WB_ENGINES[mode] = {
+            "helios": AsyncIOEngine, "gids": SyncIOEngine,
+            "cpu": CPUManagedEngine}[mode](_wb_store())
+    return _WB_ENGINES[mode]
+
+
+@pytest.mark.parametrize("mode", ["helios", "gids", "cpu"])
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(["write", "gather", "refresh", "flush",
+                               "prefetch"]),
+              st.integers(0, 2**31 - 1)),
+    min_size=1, max_size=8),
+    tiers=st.tuples(st.integers(0, 30), st.integers(0, 30)))
+@settings(**SET)
+def test_writeback_read_your_writes(mode, ops, tiers):
+    """ANY interleaving of write_planned / refresh / flush / prefetch /
+    gather never loses a written value: every gather sees exactly the
+    shadow model (read-your-writes across tier migration), and after the
+    final flush barrier STORAGE alone reproduces it — under all three
+    engine modes."""
+    from repro.core.hetero_cache import HeteroCache
+    store = _wb_store()
+    n = store.n_rows
+    all_ids = np.arange(n)
+    cache = HeteroCache(store, np.zeros(n), tiers[0], tiers[1],
+                        io_engine=_wb_engine(mode))
+    shadow = store.read_rows(all_ids)             # current durable truth
+    for op, seed in ops:
+        rng = np.random.default_rng(seed)
+        if op == "write":
+            ids = rng.integers(0, n, rng.integers(1, 24))
+            rows = rng.standard_normal((len(ids), store.row_dim)) \
+                .astype(np.float32)
+            cache.write_planned(ids, rows)
+            from repro.core.iostack import keep_last_writer
+            ki, kr = keep_last_writer(ids, rows)
+            shadow[ki] = kr
+        elif op == "gather":
+            ids = rng.integers(0, n, rng.integers(1, 24))
+            np.testing.assert_array_equal(cache.gather(ids), shadow[ids])
+        elif op == "refresh":
+            cache.refresh(rng.standard_normal(n))
+        elif op == "flush":
+            cache.flush()
+            assert cache.n_dirty == 0
+            np.testing.assert_array_equal(store.read_rows(all_ids), shadow)
+        elif op == "prefetch":
+            cand = rng.integers(0, n, 8)
+            cache.prefetch_rows(cand)
+        # the full gather ALWAYS matches, whatever just happened
+        np.testing.assert_array_equal(cache.gather(all_ids), shadow)
+    cache.flush()
+    np.testing.assert_array_equal(store.read_rows(all_ids), shadow)
+    cache.close()
+
+
+@given(n_rows=st.integers(8, 64), row_dim=st.integers(1, 5),
+       n_shards=st.integers(1, 4), seed=st.integers(0, 99))
+@settings(max_examples=10, deadline=None)
+def test_embedding_checkpoint_roundtrip_property(n_rows, row_dim, n_shards,
+                                                 seed):
+    """save_embeddings -> restore_embeddings is bit-exact for ANY store
+    geometry (rows/dims/shards) and content."""
+    import tempfile
+    from repro.checkpoint.checkpoint import CheckpointManager
+    from repro.core.iostack import FeatureStore
+    root = tempfile.mkdtemp(prefix="prop_ckpt_")
+    store = FeatureStore(f"{root}/t", n_rows=n_rows, row_dim=row_dim,
+                         n_shards=n_shards, create=True, rng_seed=seed,
+                         writable=True)
+    orig = store.read_rows(np.arange(n_rows)).copy()
+    cm = CheckpointManager(f"{root}/ckpt")
+    cm.save_embeddings(0, store, chunk_rows=7)
+    store.write_rows(np.arange(n_rows),
+                     np.zeros((n_rows, row_dim), np.float32))
+    cm.restore_embeddings(store)
+    np.testing.assert_array_equal(store.read_rows(np.arange(n_rows)), orig)
 
 
 @given(hnp.arrays(np.float32, st.integers(2, 200),
