@@ -1,0 +1,101 @@
+"""CI acceptance gates over a benchmark ``--json`` dump.
+
+One place defines which emitted ratios are GATED (must hold on every PR,
+in smoke AND full mode) so the workflow, the trajectory guard, and a
+human reading the bench output all agree on what counts:
+
+    PYTHONPATH=src python benchmarks/check_gates.py --bench io_path out.json
+
+Exit status is non-zero when any gate fails.  ``gated_ratios`` is reused
+by ``benchmarks/trajectory.py`` to extract the same numbers for the
+committed ``BENCH_<bench>.json`` baselines.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (row name, derived key, operator, threshold) per benchmark; every ratio
+# is oriented higher-is-better so the trajectory guard can apply one rule
+GATES = {
+    "io_path": [
+        ("io_path/skew1.2/striped-gap8", "x_vs_legacy", ">=", 2.0),
+        ("io_path/prefetch/trainer-summary", "reduced_ok", "==", 1.0),
+        ("io_path/prefetch/server-summary", "reduced_ok", "==", 1.0),
+        ("io_path/modes/summary", "ordering_ok", "==", 1.0),
+        ("io_path/write/striped-gap8", "x_vs_legacy", ">=", 2.0),
+        ("io_path/write/policy-summary", "x_writeback_vs_writethrough",
+         ">=", 2.0),
+        # split-phase overlap: async writes must hide under compute for a
+        # >=2x end-to-end step-time win over synchronous writes, and beat
+        # the same engine waited inline (the overlap lever in isolation)
+        ("io_path/overlap/summary", "x_split_vs_sync", ">=", 2.0),
+        ("io_path/overlap/summary", "x_split_vs_inline", ">", 1.0),
+    ],
+    "cache_policy": [
+        (f"cache_policy/{mode}/summary", key, op, thr)
+        for mode in ("helios", "gids", "cpu")
+        for key, op, thr in (("online_gain", ">", 0.0),
+                             ("oracle_bound_ok", "==", 1.0),
+                             ("belady_headroom", ">=", 0.0))
+    ],
+}
+
+_OPS = {
+    ">=": lambda v, t: v >= t,
+    ">": lambda v, t: v > t,
+    "==": lambda v, t: v == t,
+}
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as fh:
+        dump = json.load(fh)
+    return {r["name"]: r["derived"] for r in dump["rows"]}
+
+
+def field(rows: dict, name: str, key: str) -> float:
+    pairs = dict(kv.split("=", 1) for kv in rows[name].split(";"))
+    return float(pairs[key])
+
+
+def gated_ratios(bench: str, rows: dict) -> dict:
+    """The gated values as ``{"<row>::<key>": value}`` (trajectory input)."""
+    return {f"{name}::{key}": field(rows, name, key)
+            for name, key, _, _ in GATES[bench]}
+
+
+def check(bench: str, rows: dict) -> list:
+    """Evaluate every gate; returns the list of failure strings."""
+    failures = []
+    for name, key, op, thr in GATES[bench]:
+        try:
+            val = field(rows, name, key)
+        except KeyError as e:
+            failures.append(f"{name}::{key}: missing ({e})")
+            continue
+        ok = _OPS[op](val, thr)
+        print(f"{'PASS' if ok else 'FAIL'}  {name}::{key} = {val:.3f} "
+              f"(want {op} {thr})")
+        if not ok:
+            failures.append(f"{name}::{key} = {val:.3f}, want {op} {thr}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_path", help="benchmark --json dump to gate")
+    ap.add_argument("--bench", required=True, choices=sorted(GATES))
+    args = ap.parse_args()
+    failures = check(args.bench, load_rows(args.json_path))
+    if failures:
+        print(f"\n{len(failures)} gate(s) FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nall {len(GATES[args.bench])} {args.bench} gates passed")
+
+
+if __name__ == "__main__":
+    main()

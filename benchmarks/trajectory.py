@@ -1,0 +1,108 @@
+"""Bench-trajectory guard: gated ratios vs the committed baseline.
+
+``BENCH_io_path.json`` / ``BENCH_cache_policy.json`` at the repo root
+record the GATED benchmark ratios per mode (smoke/full), refreshed by CI
+on every push to main.  PR CI re-extracts the same ratios from the fresh
+run and fails when any regresses more than ``--tolerance`` (default 10%)
+below the committed value — so a change can pass the absolute acceptance
+gates yet still be caught eroding the margins the paper's claims rest on.
+
+    # PR leg: compare a fresh run against the committed baseline
+    python benchmarks/trajectory.py --check --bench io_path --mode smoke \
+        --json bench.json --baseline BENCH_io_path.json
+
+    # main leg: fold the fresh ratios into the baseline file
+    python benchmarks/trajectory.py --write --bench io_path --mode full \
+        --json bench.json --baseline BENCH_io_path.json
+
+Every gated ratio is oriented higher-is-better (see ``check_gates.GATES``),
+so one rule applies: ``new >= committed * (1 - tolerance)``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+try:                                    # `python benchmarks/trajectory.py`
+    from check_gates import gated_ratios, load_rows
+except ImportError:                     # `python -m benchmarks.trajectory`
+    from benchmarks.check_gates import gated_ratios, load_rows
+
+
+def read_baseline(path: str) -> dict:
+    if not os.path.exists(path):
+        return {}
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def check(bench: str, mode: str, json_path: str, baseline_path: str,
+          tolerance: float) -> int:
+    base = read_baseline(baseline_path).get("ratios", {}).get(mode)
+    if base is None:
+        print(f"no committed {mode} baseline in {baseline_path}; "
+              "nothing to compare (first run on a new gate set)")
+        return 0
+    fresh = gated_ratios(bench, load_rows(json_path))
+    failures = []
+    for key, committed in base.items():
+        if key not in fresh:
+            failures.append(f"{key}: gated ratio vanished from the run")
+            continue
+        floor = committed * (1.0 - tolerance)
+        ok = fresh[key] >= floor
+        print(f"{'PASS' if ok else 'FAIL'}  {key}: {fresh[key]:.3f} "
+              f"vs committed {committed:.3f} (floor {floor:.3f})")
+        if not ok:
+            failures.append(f"{key}: {fresh[key]:.3f} < {floor:.3f} "
+                            f"(committed {committed:.3f}, "
+                            f"-{tolerance:.0%} tolerance)")
+    for key in fresh.keys() - base.keys():
+        print(f"NEW   {key}: {fresh[key]:.3f} (no committed baseline yet)")
+    if failures:
+        print(f"\n{len(failures)} trajectory regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"\ntrajectory ok: {len(base)} committed {mode} ratios held")
+    return 0
+
+
+def write(bench: str, mode: str, json_path: str, baseline_path: str) -> None:
+    fresh = gated_ratios(bench, load_rows(json_path))
+    doc = read_baseline(baseline_path)
+    doc.setdefault("bench", bench)
+    doc.setdefault("ratios", {})[mode] = {k: round(v, 4)
+                                          for k, v in sorted(fresh.items())}
+    with open(baseline_path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {len(fresh)} {mode} ratios to {baseline_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", required=True,
+                    choices=("io_path", "cache_policy"))
+    ap.add_argument("--mode", required=True, choices=("smoke", "full"))
+    ap.add_argument("--json", required=True, dest="json_path",
+                    help="fresh benchmark --json dump")
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_<bench>.json path")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional regression (default 10%%)")
+    act = ap.add_mutually_exclusive_group(required=True)
+    act.add_argument("--check", action="store_true")
+    act.add_argument("--write", action="store_true")
+    args = ap.parse_args()
+    if args.write:
+        write(args.bench, args.mode, args.json_path, args.baseline)
+    else:
+        sys.exit(check(args.bench, args.mode, args.json_path,
+                       args.baseline, args.tolerance))
+
+
+if __name__ == "__main__":
+    main()

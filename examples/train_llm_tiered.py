@@ -8,7 +8,6 @@ import tempfile
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpoint import CheckpointManager
@@ -36,7 +35,8 @@ def main():
     sample = store.read_rows(np.arange(64))
     hot = token_hotness(sample.astype(np.int64), cfg.vocab)
     print(f"token hotness: top-1% of vocab covers "
-          f"{hot[np.argsort(-hot)[:cfg.vocab // 100]].sum() / hot.sum():.0%} of accesses")
+          f"{hot[np.argsort(-hot)[:cfg.vocab // 100]].sum() / hot.sum():.0%}"
+          " of accesses")
 
     params = lm.init_params(jax.random.key(0), cfg)
     opt = adamw(warmup_cosine(1e-3, 10, args.steps))

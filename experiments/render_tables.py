@@ -5,14 +5,18 @@ import sys
 
 def roofline_table(path):
     rows = json.load(open(path))
-    out = ["| cell | peak GB/chip | fits | t_comp ms | t_mem ms | t_mem floor | t_coll ms | bottleneck | useful FLOPs | MFU bound |",
+    out = ["| cell | peak GB/chip | fits | t_comp ms | t_mem ms "
+           "| t_mem floor | t_coll ms | bottleneck | useful FLOPs "
+           "| MFU bound |",
            "|---|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
         if r.get("status") == "skip":
-            out.append(f"| {r['cell']} | — | — | — | — | — | — | skip: sub-quadratic only | — | — |")
+            out.append(f"| {r['cell']} | — | — | — | — | — | — "
+                       "| skip: sub-quadratic only | — | — |")
             continue
         if r.get("status") != "ok":
-            out.append(f"| {r['cell']} | FAIL | | | | | | {r.get('error','')[:40]} | | |")
+            out.append(f"| {r['cell']} | FAIL | | | | | "
+                       f"| {r.get('error', '')[:40]} | | |")
             continue
         out.append(
             f"| {r['cell']} | {r['peak_mem_gb_per_chip']:.1f} | "
@@ -28,20 +32,24 @@ def perf_table(path):
     out = []
     for c in chains:
         out.append(f"\n**Cell: {c['cell']}**\n")
-        out.append("| variant | hypothesis (abridged) | mem ms | coll ms | compute ms | peak GB | verdict |")
+        out.append("| variant | hypothesis (abridged) | mem ms | coll ms "
+                   "| compute ms | peak GB | verdict |")
         out.append("|---|---|---|---|---|---|---|")
         prev = None
         for r in c["rows"]:
             verdict = ""
             if prev is not None:
-                dm = (r["t_memory_ms"] - prev["t_memory_ms"]) / max(prev["t_memory_ms"], 1)
-                dc = (r["t_collective_ms"] - prev["t_collective_ms"]) / max(prev["t_collective_ms"], 1)
+                dm = ((r["t_memory_ms"] - prev["t_memory_ms"])
+                      / max(prev["t_memory_ms"], 1))
+                dc = ((r["t_collective_ms"] - prev["t_collective_ms"])
+                      / max(prev["t_collective_ms"], 1))
                 dp = r["peak_mem_gb_per_chip"] - prev["peak_mem_gb_per_chip"]
                 verdict = f"mem {dm:+.0%}, coll {dc:+.0%}, peak {dp:+.1f}GB"
             out.append(
                 f"| {r['variant']} | {r['hypothesis'][:80]} | "
                 f"{r['t_memory_ms']:.0f} | {r['t_collective_ms']:.0f} | "
-                f"{r['t_compute_ms']:.0f} | {r['peak_mem_gb_per_chip']:.1f} | {verdict} |")
+                f"{r['t_compute_ms']:.0f} "
+                f"| {r['peak_mem_gb_per_chip']:.1f} | {verdict} |")
             prev = r
     return "\n".join(out)
 

@@ -187,16 +187,21 @@ class CheckpointManager:
     def _stream_rows(self, src, dst_engine, chunk_rows: int) -> float:
         """Copy every row of ``src`` into ``dst_engine``'s store through
         chunked ``submit_write`` tickets, a bounded window of them in
-        flight — terabyte tables never materialize on the host.  Returns
-        the summed virtual write seconds."""
-        virt, inflight = 0.0, []
+        flight — terabyte tables never materialize on the host.  The
+        window refills on a ``CompletionQueue`` in COMPLETION order:
+        whichever in-flight ticket finishes first frees a slot, so one
+        chunk landing on a slow shard never stalls the stream the way a
+        FIFO head-of-line wait would.  Returns the summed virtual write
+        seconds."""
+        from repro.core.iostack import CompletionQueue
+        virt, cq = 0.0, CompletionQueue()
         for lo in range(0, src.n_rows, chunk_rows):
             ids = np.arange(lo, min(src.n_rows, lo + chunk_rows))
-            inflight.append(dst_engine.submit_write(ids, src.read_rows(ids),
-                                                    tag="ckpt"))
-            while len(inflight) >= self._EMB_INFLIGHT:
-                virt += inflight.pop(0).wait()[1]
-        for tk in inflight:
+            dst_engine.submit_write(ids, src.read_rows(ids), tag="ckpt",
+                                    cq=cq)
+            while cq.pending >= self._EMB_INFLIGHT:
+                virt += cq.pop().wait()[1]      # first-done, not FIFO head
+        for tk in cq.drain():
             virt += tk.wait()[1]
         return virt
 

@@ -7,7 +7,7 @@ variant of any config (same family / same code paths, tiny dims).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 from repro.models.moe import MoEConfig

@@ -41,7 +41,8 @@ from repro.core.policy import (CachePolicy, StaticPresamplePolicy,
 from repro.core.simulator import (DEFAULT_ENVELOPE, HardwareEnvelope,
                                   dram_gather_time, hbm_gather_time,
                                   pcie_time)
-from repro.core.writeback import FlushResult, MutableTierTable, WriteResult
+from repro.core.writeback import (FlushResult, MutableTierTable,
+                                  WriteCombiner, WriteResult)
 
 
 @dataclass
@@ -132,6 +133,56 @@ class PendingPrefetch:
         self.versions = versions        # write versions of ids at issue
 
 
+class PendingWrite:
+    """In-flight split-phase write: the tier updates landed at submit time
+    (gathers already observe the new values), only the storage
+    write-through ticket is still in flight.  ``complete_write`` harvests
+    the ticket and finalizes the accounting; until then the cache keeps
+    the handle registered so a ``flush()`` barrier can complete it before
+    declaring storage durable."""
+
+    __slots__ = ("result", "ticket", "done", "_lk")
+
+    def __init__(self, result, ticket):
+        self.result = result            # WriteResult (virtual_s grows at
+        self.ticket = ticket            # completion); ticket may be None
+        self.done = ticket is None
+        self._lk = threading.Lock()
+
+
+class PendingFlush:
+    """In-flight flush/flush-on-demote ticket: the written values were
+    snapshotted into the ticket at submit, so the tier copies may drop
+    immediately; completion clears dirty bits ONLY for rows whose version
+    still matches the submit-time snapshot (a row re-written mid-flight
+    is dirty again with a newer value and must stay dirty)."""
+
+    __slots__ = ("ids", "versions", "ticket", "virt", "done", "_lk")
+
+    def __init__(self, ids, versions, ticket):
+        self.ids = ids
+        self.versions = versions
+        self.ticket = ticket
+        self.virt = 0.0
+        self.done = False
+        self._lk = threading.Lock()
+
+
+class PendingEpochFlush:
+    """In-flight epoch/checkpoint barrier: the combined dirty-row ticket
+    was submitted (phase 1); ``flush_complete`` waits it — plus every
+    other split-phase write still in flight — and then msyncs the shard
+    memmaps (phase 2).  Lets the trainer overlap the barrier write with
+    the next batches instead of stalling the epoch boundary."""
+
+    __slots__ = ("pf", "rows", "bytes")
+
+    def __init__(self, pf, rows, nbytes):
+        self.pf = pf                    # PendingFlush | None (nothing dirty)
+        self.rows = rows
+        self.bytes = nbytes
+
+
 class PendingGather:
     """In-flight split-phase gather: tier plan + table/tier snapshot.
 
@@ -141,15 +192,18 @@ class PendingGather:
     """
 
     __slots__ = ("ids", "plan", "out", "ticket", "device_tier", "host_tier",
-                 "t0", "done", "storage_virt", "_looked", "_dev_rows", "_lk")
+                 "t0", "done", "storage_virt", "wc_patch", "_looked",
+                 "_dev_rows", "_lk")
 
-    def __init__(self, ids, plan, out, ticket, device_tier, host_tier):
+    def __init__(self, ids, plan, out, ticket, device_tier, host_tier,
+                 wc_patch=None):
         self.ids = ids
         self.plan = plan
         self.out = out
         self.ticket = ticket
         self.device_tier = device_tier
         self.host_tier = host_tier
+        self.wc_patch = wc_patch        # (dests, rows) write-combiner overlay
         self.t0 = time.perf_counter()
         self.done = False
         self.storage_virt = 0.0         # virtual s the ticket resolved with
@@ -199,7 +253,8 @@ class HeteroCache:
                  io_engine: AsyncIOEngine | None = None,
                  env: HardwareEnvelope = DEFAULT_ENVELOPE,
                  policy: CachePolicy | None = None,
-                 write_policy: str = "writeback"):
+                 write_policy: str = "writeback",
+                 write_combine_rows: int = 0):
         if write_policy not in ("writeback", "writethrough"):
             raise ValueError(f"unknown write_policy {write_policy!r} "
                              "(expected writeback | writethrough)")
@@ -210,6 +265,23 @@ class HeteroCache:
         # exists over a writable store (read-only stores keep the PR-3
         # behavior exactly — eviction stays free)
         self.mut = MutableTierTable(store.n_rows) if store.writable else None
+        # write-combining buffer: flush-on-demote batches smaller than
+        # ``write_combine_rows`` accumulate here (one combined ticket
+        # later) instead of paying a tiny storage ticket each; 0 disables
+        self._wc = (WriteCombiner(write_combine_rows)
+                    if write_combine_rows and self.mut is not None else None)
+        # orders gather submission against combiner release: a gather
+        # holds it across [overlay lookup -> storage submit] and the
+        # flusher across [take -> submit_write], so a combined row either
+        # overlays the gather or its write is queued before the gather's
+        # read (per-shard FIFO finishes the argument) — without this, a
+        # read slipping into the take->submit window would return stale
+        # storage bytes with no overlay
+        self._wc_io_lock = threading.Lock()
+        # split-phase writes/flushes still in flight: the flush() barrier
+        # completes these before it may declare storage durable
+        self._inflight: list = []
+        self._wr_lock = threading.Lock()
         self._owns_engine = io_engine is None
         self.io = io_engine or AsyncIOEngine(store, env=env)
         if policy is None:
@@ -269,8 +341,25 @@ class HeteroCache:
         n_out = len(ids) if n_rows is None else n_rows
         out = np.zeros((n_out, self.store.row_dim), self.store.dtype)
         sids, sdest = plan[2]
-        ticket = self.io.submit(sids, out, sdest) if len(sids) else None
-        return PendingGather(ids, plan, out, ticket, device_tier, host_tier)
+        # write-combiner overlay, captured at SUBMIT time: a buffered row
+        # is fresher than storage.  The lookup and the storage submit sit
+        # under ONE lock shared with the combiner's take->submit_write, so
+        # either the entry is still buffered (overlay patches it) or the
+        # combined write was queued before this read on its shard and
+        # per-shard FIFO makes the read observe it
+        wc_patch = None
+        if self._wc is not None and len(sids):
+            with self._wc_io_lock:
+                if len(self._wc):
+                    hit = self._wc.lookup(sids)
+                    if hit is not None:
+                        mask, rows = hit
+                        wc_patch = (sdest[mask], rows)
+                ticket = self.io.submit(sids, out, sdest)
+        else:
+            ticket = self.io.submit(sids, out, sdest) if len(sids) else None
+        return PendingGather(ids, plan, out, ticket, device_tier, host_tier,
+                             wc_patch)
 
     def lookup_planned(self, pg: PendingGather) -> None:
         """Phase 2: host-tier gather into the buffer + device-tier gather
@@ -299,6 +388,11 @@ class HeteroCache:
                 return pg.out
             if pg._dev_rows is not None:
                 pg.out[pg.plan[0][1]] = np.asarray(pg._dev_rows)
+            if pg.wc_patch is not None:
+                # buffered write-combiner values override the (stale)
+                # storage rows the ticket just landed
+                dests, rows = pg.wc_patch
+                pg.out[dests] = rows
             pg.storage_virt = virt_sto
             pg.done = True
 
@@ -332,8 +426,9 @@ class HeteroCache:
     # ------------------------------------------------------------------
     # write path: mutable tiers, write-back dirty tracking, flush barrier
     # ------------------------------------------------------------------
-    def write_planned(self, ids: np.ndarray, rows: np.ndarray) -> WriteResult:
-        """Update feature rows through the tier hierarchy.
+    def write_planned(self, ids: np.ndarray, rows: np.ndarray,
+                      wait: bool = True):
+        """Update feature rows through the tier hierarchy (SPLIT-PHASE).
 
         Resident rows are updated IN PLACE in their tier (host DRAM scatter;
         device HBM functional update swapped atomically) and, under the
@@ -341,9 +436,15 @@ class HeteroCache:
         flush-on-demote or an explicit ``flush()``.  Storage-resident rows
         always write through (``submit_write``), so a gather after a write
         returns the new value no matter where the row lives
-        (read-your-writes).  The ``writethrough`` ablation also pushes every
-        cached write to storage immediately.  Duplicate ids resolve
-        last-writer-wins in batch order.
+        (read-your-writes; the engine's per-shard FIFO makes this hold even
+        while the write ticket is still in flight).  The ``writethrough``
+        ablation also pushes every cached write to storage immediately.
+        Duplicate ids resolve last-writer-wins in batch order.
+
+        With ``wait=False`` the storage ticket stays IN FLIGHT and a
+        ``PendingWrite`` is returned — complete it with ``complete_write``
+        (or let the next ``flush()`` barrier do it), so storage writes hide
+        under device compute instead of blocking the caller.
         """
         if self.mut is None:
             raise PermissionError("write_planned needs a writable "
@@ -357,7 +458,7 @@ class HeteroCache:
         ids, rows = keep_last_writer(ids, rows)
         res = WriteResult(rows=len(ids))
         if not len(ids):
-            return res
+            return res if wait else PendingWrite(res, None)
         with self._refresh_lock:
             lc = self.loc[ids]
             d, h, m = lc == 0, lc == 1, lc == 2
@@ -377,25 +478,55 @@ class HeteroCache:
             res.device_rows, res.host_rows = int(d.sum()), int(h.sum())
             through = (m if self.write_policy == "writeback"
                        else np.ones(len(ids), bool))
+            ticket = None
             if through.any():
-                _, virt = self.io.submit_write(ids[through], rows[through],
-                                               tag="write").wait()
+                ticket = self.io.submit_write(ids[through], rows[through],
+                                              tag="write")
                 res.through_rows = int(through.sum())
-                res.virtual_s = virt
             if self.write_policy == "writeback":
                 self.mut.mark_dirty(ids[~m])
                 self.mut.bump_version(ids[m])
+                # the through ticket is the LAST write on its shards'
+                # queues, so once it lands storage IS current for those
+                # rows: any write-combiner entry (and any dirty bit left
+                # by a still-in-flight demotion flush) is superseded
+                self.mut.clear_dirty(ids[m])
             else:
                 self.mut.bump_version(ids)
+            if self._wc is not None and through.any():
+                self._wc.drop(ids[through])
             with self._stats_lock:
                 st = self.stats
                 st.writes += 1
                 st.written_rows += len(ids)
                 st.write_through_rows += res.through_rows
-                st.virtual_write_s += res.virtual_s
-        return res
+            pw = PendingWrite(res, ticket)
+            if ticket is not None:
+                with self._wr_lock:
+                    self._inflight.append(pw)
+        if wait:
+            return self.complete_write(pw)
+        return pw
 
-    def apply_delta(self, ids: np.ndarray, delta: np.ndarray) -> WriteResult:
+    def complete_write(self, pw: PendingWrite) -> WriteResult:
+        """Harvest a split-phase write: wait out (or reap) the storage
+        ticket and book its virtual seconds.  Idempotent; safe to call
+        from a different pipeline batch than the one that submitted."""
+        with pw._lk:
+            if pw.done:
+                return pw.result
+            _, virt = pw.ticket.wait()
+            pw.result.virtual_s += virt
+            pw.done = True
+        with self._wr_lock:
+            if pw in self._inflight:
+                self._inflight.remove(pw)
+        with self._stats_lock:
+            self.stats.virtual_write_s += virt
+        return pw.result
+
+    def apply_delta(self, ids: np.ndarray, delta: np.ndarray,
+                    wait: bool = True):
         """Read-modify-write: add ``delta`` to the CURRENT value of each row
         and write the sum back through ``write_planned``.
 
@@ -406,7 +537,9 @@ class HeteroCache:
         the live value under the refresh lock so updates COMPOSE no matter
         how batches interleave.  Duplicate ids contribute their summed
         delta.  Storage-resident rows pay a real RMW read ticket before
-        the write-through."""
+        the write-through.  ``wait=False`` split-phases the write-back leg
+        (returns a ``PendingWrite``); the RMW read itself must resolve
+        before the sum can be formed, so only the write hides."""
         if self.mut is None:
             raise PermissionError("apply_delta needs a writable "
                                   "FeatureStore (writable=True)")
@@ -417,7 +550,7 @@ class HeteroCache:
             raise ValueError(f"delta shape {delta.shape} != "
                              f"({len(ids)}, {self.store.row_dim})")
         if len(ids) == 0:
-            return WriteResult()
+            return WriteResult() if wait else PendingWrite(WriteResult(), None)
         uniq, inv = np.unique(ids, return_inverse=True)
         summed = np.zeros((len(uniq), self.store.row_dim), self.store.dtype)
         np.add.at(summed, inv, delta)
@@ -434,19 +567,30 @@ class HeteroCache:
             if m.any():
                 _, rmw_virt = self.io.submit(uniq[m], cur, m.nonzero()[0],
                                              tag="rmw").wait()
-            res = self.write_planned(uniq, cur + summed)
+                if self._wc is not None and len(self._wc):
+                    # write-combiner entries are fresher than the storage
+                    # rows the RMW read just returned
+                    hit = self._wc.lookup(uniq[m])
+                    if hit is not None:
+                        mask, rows = hit
+                        cur[m.nonzero()[0][mask]] = rows
+            out = self.write_planned(uniq, cur + summed, wait=wait)
             # the RMW read rides res.virtual_s so the pipeline charges it
             # to the writing operator; the engine already booked it on the
             # READ side (virtual_io_s), keeping cache write stats == engine
             # write stats exactly
+            res = out if wait else out.result
             res.virtual_s += rmw_virt
-            return res
+            return out
 
-    def _write_back(self, ids: np.ndarray, tag: str) -> float:
-        """Write the CURRENT tier values of ``ids`` to storage through one
-        batched ``submit_write`` ticket and clear their dirty bits.  Caller
-        holds the refresh lock; tables/tier arrays must still map the rows
-        (call BEFORE any demotion swap drops the tier copy)."""
+    def _snapshot_inflight(self, cls=None) -> list:
+        with self._wr_lock:
+            return [p for p in self._inflight
+                    if cls is None or isinstance(p, cls)]
+
+    def _resident_values(self, ids: np.ndarray) -> np.ndarray:
+        """CURRENT tier values of resident ``ids`` (caller holds the
+        refresh lock; tables must still map the rows)."""
         import jax.numpy as jnp
         rows = np.empty((len(ids), self.store.row_dim), self.store.dtype)
         lc, sl = self.loc[ids], self.slot[ids]
@@ -457,42 +601,142 @@ class HeteroCache:
         if d.any():
             rows[d] = np.asarray(jnp.take(self.device_tier,
                                           jnp.asarray(sl[d]), axis=0))
-        _, virt = self.io.submit_write(ids, rows, tag=tag).wait()
-        self.mut.clear_dirty(ids)
+        return rows
+
+    def _write_back_submit(self, ids: np.ndarray, rows: np.ndarray,
+                           tag: str) -> PendingFlush:
+        """SUBMIT one batched write-back ticket for ``ids``/``rows``.  The
+        values ride in the ticket (snapshotted), so the caller may drop
+        the tier copies immediately; the version snapshot makes the
+        completion-side dirty clear revalidate against mid-flight writes."""
+        pf = PendingFlush(ids, self.mut.versions(ids),
+                          self.io.submit_write(ids, rows, tag=tag))
+        with self._wr_lock:
+            self._inflight.append(pf)
+        return pf
+
+    def complete_write_back(self, pf: PendingFlush) -> float:
+        """COMPLETE a flush/flush-on-demote ticket: wait it out, clear
+        dirty bits for rows whose version still matches the submit-time
+        snapshot (rows re-written mid-flight stay dirty — their newer
+        value must survive to the next barrier), book stats.  Idempotent."""
+        with pf._lk:
+            if pf.done:
+                return pf.virt
+            _, virt = pf.ticket.wait()
+            self.mut.clear_dirty_if_version(pf.ids, pf.versions)
+            pf.virt = virt
+            pf.done = True
+        with self._wr_lock:
+            if pf in self._inflight:
+                self._inflight.remove(pf)
         with self._stats_lock:
-            self.stats.flushed_rows += len(ids)
+            self.stats.flushed_rows += len(pf.ids)
             self.stats.virtual_flush_s += virt
         return virt
 
     def _flush_demoted(self, ids: np.ndarray) -> tuple:
-        """Flush-on-demote: of ``ids`` (rows about to lose their cached
-        copy), write back the dirty ones.  Returns (n_flushed, virt)."""
+        """Flush-on-demote, split-phase: of ``ids`` (rows about to lose
+        their cached copy), write back the dirty ones.  Small batches are
+        absorbed by the write-combining buffer (one coalesced ticket once
+        ``write_combine_rows`` accumulate) instead of paying a tiny ticket
+        each; larger batches submit their ticket immediately and only
+        resolve inline when the engine already completed it (sync modes).
+        Returns ``(n_flushed, inline_virt)`` — async tickets book their
+        virtual seconds at completion, so ``inline_virt`` is 0 for them."""
         if self.mut is None or not len(ids):
             return 0, 0.0
         dirty = ids[self.mut.is_dirty(ids)]
         if not len(dirty):
             return 0, 0.0
-        return len(dirty), self._write_back(dirty, tag="flush-demote")
+        rows = self._resident_values(dirty)
+        if self._wc is not None and len(dirty) < self._wc.min_rows:
+            # the combiner becomes the freshest holder (rows stay dirty);
+            # gathers overlay these values over stale storage reads
+            self._wc.add(dirty, rows)
+            virt = 0.0
+            if self._wc.ready:
+                with self._wc_io_lock:      # atomic take->submit vs gathers
+                    wids, wrows = self._wc.take()
+                    pf = self._write_back_submit(wids, wrows,
+                                                 tag="flush-combine")
+                if pf.ticket.poll():
+                    virt = self.complete_write_back(pf)
+            return len(dirty), virt
+        pf = self._write_back_submit(dirty, rows, tag="flush-demote")
+        if pf.ticket.poll():            # sync engines resolve at submit
+            return len(dirty), self.complete_write_back(pf)
+        return len(dirty), 0.0
 
-    def flush(self) -> FlushResult:
-        """Epoch/checkpoint barrier: write back EVERY dirty row through one
-        batched ticket (the striped engine splits it per shard and
-        coalesces dirty runs into sequential writes), then push the shard
-        memmaps to storage for durability.  After flush() returns, storage
-        alone reconstructs every written value."""
+    def flush_submit(self) -> "PendingEpochFlush | None":
+        """Phase 1 of the epoch/checkpoint barrier: settle outstanding
+        flush-on-demote tickets (their version-checked completion decides
+        what is STILL dirty), then submit ONE batched ticket carrying
+        every remaining dirty row — write-combiner contents at their
+        buffered values, residents at their tier values.  Returns a handle
+        for ``flush_complete``; None when the store is read-only."""
         if self.mut is None:
-            return FlushResult()
+            return None
         with self._refresh_lock:
-            ids = self.mut.dirty_ids()
-            virt = self._write_back(ids, tag="flush") if len(ids) else 0.0
-            # the durability barrier runs even with nothing dirty:
-            # write-through rows landed in the memmaps without an msync,
-            # and the barrier is what makes THEM crash-safe too
-            self.store.flush()
-            with self._stats_lock:
-                self.stats.flushes += 1
-            return FlushResult(len(ids), len(ids) * self.store.row_bytes,
-                               virt)
+            for p in self._snapshot_inflight(PendingFlush):
+                self.complete_write_back(p)
+            with self._wc_io_lock:          # atomic take->submit vs gathers
+                wc_ids = np.empty(0, np.int64)
+                wc_rows = None
+                if self._wc is not None:
+                    wc_ids, wc_rows = self._wc.take()
+                dirty = self.mut.dirty_ids()
+                resident = dirty[self.loc[dirty] < 2]
+                ids = np.concatenate([wc_ids, resident])
+                pf = None
+                if len(ids):
+                    rows = np.empty((len(ids), self.store.row_dim),
+                                    self.store.dtype)
+                    if len(wc_ids):
+                        rows[:len(wc_ids)] = wc_rows
+                    if len(resident):
+                        rows[len(wc_ids):] = self._resident_values(resident)
+                    pf = self._write_back_submit(ids, rows, tag="flush")
+            return PendingEpochFlush(pf, len(ids),
+                                     len(ids) * self.store.row_bytes)
+
+    def flush_complete(self, ef: "PendingEpochFlush | None") -> FlushResult:
+        """Phase 2 of the barrier: complete the barrier ticket AND every
+        split-phase write still in flight, then push the shard memmaps to
+        storage.  After this returns, storage alone reconstructs every
+        value written before ``flush_submit``."""
+        if self.mut is None or ef is None:
+            return FlushResult()
+        virt = self.complete_write_back(ef.pf) if ef.pf is not None else 0.0
+        # in-flight write-through tickets landed in the memmaps the moment
+        # their shards serviced them, but the durability barrier must WAIT
+        # them out before msync — and late flush-on-demote tickets too
+        for p in self._snapshot_inflight():
+            if isinstance(p, PendingWrite):
+                self.complete_write(p)
+            else:
+                self.complete_write_back(p)
+        # the durability barrier runs even with nothing dirty:
+        # write-through rows landed in the memmaps without an msync,
+        # and the barrier is what makes THEM crash-safe too
+        self.store.flush()
+        with self._stats_lock:
+            self.stats.flushes += 1
+        return FlushResult(ef.rows, ef.bytes, virt)
+
+    def flush(self, wait: bool = True):
+        """Epoch/checkpoint barrier (fused split-phase): write back EVERY
+        dirty row through one batched ticket (the striped engine splits it
+        per shard and coalesces dirty runs into sequential writes), then
+        msync the shard memmaps.  ``wait=False`` returns the
+        ``PendingEpochFlush`` with the barrier ticket in flight — complete
+        it with ``flush_complete`` once the overlapped compute is done."""
+        ef = self.flush_submit()
+        if ef is None:
+            return FlushResult()
+        if wait:
+            return self.flush_complete(ef)
+        return ef
 
     @property
     def n_dirty(self) -> int:
@@ -577,6 +821,16 @@ class HeteroCache:
                                        self.store.dtype)
                     _, virt_adm = self.io.submit(adm_ids, adm_buf,
                                                  tag="refresh").wait()
+                    if self._wc is not None and len(self._wc):
+                        # write-combined rows: storage is stale, the
+                        # buffered value is the row — the promoted tier
+                        # copy becomes the freshest holder (still dirty),
+                        # so the combiner entry is superseded
+                        hit = self._wc.lookup(adm_ids)
+                        if hit is not None:
+                            wmask, wvals = hit
+                            adm_buf[wmask] = wvals
+                            self._wc.drop(adm_ids[wmask])
                     dev_buf[miss] = adm_buf[:len(miss)]
                     host_buf[miss_h] = adm_buf[len(miss):]
 
@@ -681,6 +935,11 @@ class HeteroCache:
         with self._refresh_lock:
             ids = np.asarray(ids)
             ids = ids[self.loc[ids] == 2]           # storage-resident only
+            if self.mut is not None and len(ids):
+                # demoted-dirty rows (write-combined or mid-flush) await a
+                # write-back: a storage prefetch racing that write could
+                # admit pre-write bytes, so they are not prefetchable
+                ids = ids[~self.mut.is_dirty(ids)]
             _, first = np.unique(ids, return_index=True)
             ids = ids[np.sort(first)]               # dedupe, keep ranking
             tier = ("host" if self.host_rows
@@ -779,8 +1038,24 @@ class HeteroCache:
 
     # ------------------------------------------------------------------
     def close(self):
-        """Shut down the IO engine iff this cache created it; shared
-        engines are closed by their owner (trainer/server)."""
+        """Settle split-phase writes still in flight (their tickets would
+        otherwise strand unaccounted) and release any write-combined rows
+        — the combiner holds the ONLY copy of demoted-dirty values, and
+        pre-combiner flush-on-demote persisted them at demotion time, so
+        discarding the buffer here would silently lose writes — then shut
+        down the IO engine iff this cache created it; shared engines are
+        closed by their owner (trainer/server)."""
+        if self._wc is not None and len(self._wc):
+            with self._wc_io_lock:
+                wids, wrows = self._wc.take()
+                if len(wids):
+                    # registered in _inflight; the settle loop completes it
+                    self._write_back_submit(wids, wrows, tag="flush-combine")
+        for p in self._snapshot_inflight():
+            if isinstance(p, PendingWrite):
+                self.complete_write(p)
+            else:
+                self.complete_write_back(p)
         if self._owns_engine:
             self.io.close()
 

@@ -7,9 +7,14 @@ Helios's GPU-initiated NVMe stack has two properties we preserve exactly:
      BOUNDED worker budget (the paper's "~30% of GPU cores") is enough to
      saturate the array, because workers only build/submit commands.
   2. *Decoupled asynchronous completion*: submission returns a ticket
-     immediately; completions land on a completion queue serviced
+     immediately; completions land on PER-SHARD completion queues serviced
      independently, so nothing blocks between submit and complete and the
-     accelerator never idles on IO.
+     accelerator never idles on IO.  Tickets resolve the moment THEIR
+     shards finish (virtual time = max over their own shards, never the
+     global drain), ``IOTicket.poll``/``try_complete`` check without
+     blocking, and a ``CompletionQueue`` harvests many in-flight tickets
+     in completion order — one slow shard never gates an
+     otherwise-finished ticket.
 
 Engines:
   * AsyncIOEngine   — Helios (decoupled SQ/CQ, bounded workers)
@@ -88,7 +93,8 @@ class FeatureStore:
                     block = 1 << 14
                     for i in range(0, shape[0], block):
                         j = min(shape[0], i + block)
-                        mm[i:j] = rng.standard_normal((j - i, row_dim)).astype(self.dtype)
+                        mm[i:j] = rng.standard_normal(
+                            (j - i, row_dim)).astype(self.dtype)
                 mm.flush()
             self.shards.append(np.lib.format.open_memmap(
                 f, mode="r+" if writable else "r"))
@@ -160,6 +166,90 @@ class IOTicket:
 
     def wait(self):
         return self.future.result()
+
+    def poll(self) -> bool:
+        """Non-blocking completion check: True once every shard of THIS
+        ticket has completed (other tickets' stragglers don't matter)."""
+        return self.future.done()
+
+    def try_complete(self):
+        """Harvest without blocking: the resolved ``(data, virtual_s)``
+        when the ticket is done, else ``None`` — the split-phase caller's
+        poll loop primitive (a failed ticket re-raises here, exactly as
+        ``wait()`` would)."""
+        return self.future.result(timeout=0) if self.future.done() else None
+
+
+class CompletionQueue:
+    """Out-of-order harvest over many in-flight tickets.
+
+    Tickets land here the moment THEIR shards complete, so a caller
+    draining a multi-ticket batch pops them in completion order instead
+    of blocking on whichever ticket happens to sit at the head of a FIFO
+    wait loop — the decoupled-CQ half of the paper's stack, surfaced to
+    callers (checkpoint streaming, flush barriers, benchmark harvests).
+    """
+
+    def __init__(self):
+        self._q: queue.Queue = queue.Queue()
+        self._pending = 0
+        self._lk = threading.Lock()
+
+    def add(self, ticket: IOTicket) -> IOTicket:
+        with self._lk:
+            self._pending += 1
+        # fires immediately if the ticket already resolved (sync engines)
+        ticket.future.add_done_callback(lambda _f: self._q.put(ticket))
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        """Tickets added but not yet popped (in flight OR ready)."""
+        with self._lk:
+            return self._pending
+
+    def try_pop(self) -> IOTicket | None:
+        """One finished ticket in completion order, or None."""
+        try:
+            tk = self._q.get_nowait()
+        except queue.Empty:
+            return None
+        with self._lk:
+            self._pending -= 1
+        return tk
+
+    def pop(self, timeout: float | None = None) -> IOTicket:
+        """Block until ANY in-flight ticket finishes; first-done wins."""
+        tk = self._q.get(timeout=timeout)
+        with self._lk:
+            self._pending -= 1
+        return tk
+
+    def harvest(self, block: bool = False) -> list:
+        """Every currently-finished ticket, completion order.  With
+        ``block=True`` and nothing ready, waits for the first completion
+        (then still returns everything that finished by that point)."""
+        out = []
+        while True:
+            tk = self.try_pop()
+            if tk is None:
+                break
+            out.append(tk)
+        if block and not out and self.pending:
+            out.append(self.pop())
+            while True:
+                tk = self.try_pop()
+                if tk is None:
+                    break
+                out.append(tk)
+        return out
+
+    def drain(self) -> list:
+        """Pop every added ticket (blocking), completion order."""
+        out = []
+        while self.pending:
+            out.append(self.pop())
+        return out
 
 
 @dataclass
@@ -349,10 +439,26 @@ class AsyncIOEngine:
         self.amp_cap = amp_cap
         self._ssd = SSDModel(env)
         self._sq: queue.Queue = queue.Queue()       # legacy whole-batch queue
+        # legacy path: one service lock so the whole-batch FIFO stays a
+        # genuinely serial stream even with several workers alive — the
+        # ablation's documented semantics, and the ordering guarantee the
+        # split-phase write path relies on (a read submitted after a write
+        # must observe it)
+        self._legacy_lk = threading.Lock()
         # striped path: one submission queue per shard + a ready queue of
         # shard tokens (one per SQE batch) that the bounded workers pop
         self._sqs = [queue.Queue() for _ in range(store.n_shards)]
         self._ready: queue.Queue = queue.Queue()
+        # one completion queue per shard: a serviced SQE batch posts its
+        # CQE here and the servicing worker reaps it into the ticket, so
+        # each shard's completions progress independently of every other
+        # shard's backlog (out-of-order ticket completion)
+        self._cqs = [queue.Queue() for _ in range(store.n_shards)]
+        # per-shard service locks: each shard's SQ drains FIFO through ONE
+        # worker at a time (shards still progress in parallel with each
+        # other), which is what makes a read submitted after an in-flight
+        # split-phase write to the same shard observe that write
+        self._shard_lk = [threading.Lock() for _ in range(store.n_shards)]
         self.stats = IOStats()
         self._lock = threading.Lock()
         self._stop = False
@@ -364,7 +470,8 @@ class AsyncIOEngine:
 
     # -- submission (returns immediately: nothing waits on the device) ----
     def submit(self, ids: np.ndarray, out: np.ndarray | None = None,
-               dest: np.ndarray | None = None, tag: str = "") -> IOTicket:
+               dest: np.ndarray | None = None, tag: str = "",
+               cq: CompletionQueue | None = None) -> IOTicket:
         fut: Future = Future()
         t0 = time.perf_counter()
         ids = np.asarray(ids)
@@ -378,6 +485,8 @@ class AsyncIOEngine:
                 self.stats.bytes += nbytes
                 self.stats.wall_submit_s += tk.submit_wall
                 self.stats.batches += 1
+            if cq is not None:
+                cq.add(tk)
             return tk
 
         # striped: split the batch by shard, one SQE batch per shard
@@ -408,10 +517,13 @@ class AsyncIOEngine:
             self.stats.wall_submit_s += tk.submit_wall
             self.stats.batches += 1
             self.stats.shard_batches += len(batches)
+        if cq is not None:
+            cq.add(tk)
         return tk
 
     def submit_write(self, ids: np.ndarray, rows: np.ndarray,
-                     tag: str = "") -> IOTicket:
+                     tag: str = "",
+                     cq: CompletionQueue | None = None) -> IOTicket:
         """``submit()`` mirror for the WRITE path: per-shard striped SQE
         write batches, range-coalesced sequential writes, one aggregating
         ticket.  Duplicate ids resolve last-writer-wins BEFORE striping, so
@@ -438,6 +550,8 @@ class AsyncIOEngine:
                 self.stats.write_bytes += nbytes
                 self.stats.wall_submit_s += tk.submit_wall
                 self.stats.write_batches += 1
+            if cq is not None:
+                cq.add(tk)
             return tk
 
         sid, off = self.store.locate(ids)
@@ -462,6 +576,8 @@ class AsyncIOEngine:
             self.stats.wall_submit_s += tk.submit_wall
             self.stats.write_batches += 1
             self.stats.write_shard_batches += len(batches)
+        if cq is not None:
+            cq.add(tk)
         return tk
 
     def _gap_for(self, offs: np.ndarray) -> int:
@@ -513,37 +629,74 @@ class AsyncIOEngine:
         return virt, n_ranges, span_bytes
 
     # -- completion handling (worker pool = the paper's CQ-polling kernel) -
+    def _reap_cq(self, s: int):
+        """Drain shard ``s``'s completion queue into its tickets.  CQEs
+        carry everything the aggregation needs, so reaping is lock-free
+        with respect to the shard's SERVICE path — a slow service on one
+        shard never delays another shard's reap."""
+        while True:
+            try:
+                comp, cqe = self._cqs[s].get_nowait()
+            except queue.Empty:
+                return
+            if isinstance(cqe, BaseException):
+                comp.shard_fail(cqe)
+            else:
+                comp.shard_done(*cqe)
+
     def _worker(self):
         while not self._stop:
             try:
                 s = self._ready.get(timeout=0.1)
             except queue.Empty:
                 continue
-            try:
-                kind, offs, payload, comp = self._sqs[s].get_nowait()
-            except queue.Empty:         # pragma: no cover - token per entry
+            # per-shard FIFO service: one worker drains a given shard's SQ
+            # at a time (its batches land in submission order — the
+            # read-after-write guarantee the split-phase write path needs),
+            # while OTHER shards proceed in parallel on other workers.  On
+            # contention the token goes back and the worker moves on.
+            if not self._shard_lk[s].acquire(blocking=False):
+                self._ready.put(s)
                 self._ready.task_done()
+                time.sleep(2e-4)        # don't spin hot on one busy shard
                 continue
             try:
-                t0 = time.perf_counter()
-                if kind == "w":
-                    out = self._service_shard_write(s, offs, payload)
-                else:
-                    d, buf = payload
-                    out = self._service_shard(s, offs, d, buf)
-                comp.shard_done(*out, time.perf_counter() - t0)
-            except Exception as e:      # pragma: no cover
-                comp.shard_fail(e)
+                try:
+                    kind, offs, payload, comp = self._sqs[s].get_nowait()
+                except queue.Empty:     # pragma: no cover - token per entry
+                    continue
+                try:
+                    t0 = time.perf_counter()
+                    if kind == "w":
+                        out = self._service_shard_write(s, offs, payload)
+                    else:
+                        d, buf = payload
+                        out = self._service_shard(s, offs, d, buf)
+                    self._cqs[s].put((comp, (*out,
+                                             time.perf_counter() - t0)))
+                except Exception as e:  # pragma: no cover
+                    self._cqs[s].put((comp, e))
             finally:
+                self._shard_lk[s].release()
+                # the CQE is reaped OUTSIDE the shard lock: ticket
+                # aggregation (and future resolution callbacks) never
+                # block the next SQE batch of this shard from starting
+                self._reap_cq(s)
                 # pairs with drain()'s Queue.join(): the token only counts
                 # as done once its shard read landed and was aggregated
                 self._ready.task_done()
 
     def _worker_legacy(self):
         while not self._stop:
+            # the pop happens INSIDE the service lock: two workers popping
+            # FIFO items and racing their service would reorder a read
+            # after the write it must observe
+            if not self._legacy_lk.acquire(timeout=0.1):
+                continue
             try:
                 kind, ids, a, b, fut = self._sq.get(timeout=0.1)
             except queue.Empty:
+                self._legacy_lk.release()
                 continue
             try:
                 t0 = time.perf_counter()
@@ -577,6 +730,7 @@ class AsyncIOEngine:
             except Exception as e:      # pragma: no cover
                 fut.set_exception(e)
             finally:
+                self._legacy_lk.release()
                 # pairs with drain()'s Queue.join(): the item only counts
                 # as done once its read landed and its future resolved
                 self._sq.task_done()
@@ -647,7 +801,8 @@ class SyncIOEngine:
         return 0.0
 
     def submit(self, ids: np.ndarray, out: np.ndarray | None = None,
-               dest: np.ndarray | None = None, tag: str = "") -> IOTicket:
+               dest: np.ndarray | None = None, tag: str = "",
+               cq: CompletionQueue | None = None) -> IOTicket:
         t0 = time.perf_counter()
         data = self.store.read_rows(ids)
         if out is not None:
@@ -667,11 +822,15 @@ class SyncIOEngine:
         # the ticket resolves with the SAME virtual seconds the engine
         # accounted — downstream (cache stats) must agree with engine stats
         fut.set_result((data if out is None else None, virt))
-        return IOTicket(fut, len(ids), len(ids) * self.store.row_bytes,
-                        time.perf_counter() - t0, tag, shards=1)
+        tk = IOTicket(fut, len(ids), len(ids) * self.store.row_bytes,
+                      time.perf_counter() - t0, tag, shards=1)
+        if cq is not None:
+            cq.add(tk)
+        return tk
 
     def submit_write(self, ids: np.ndarray, rows: np.ndarray,
-                     tag: str = "") -> IOTicket:
+                     tag: str = "",
+                     cq: CompletionQueue | None = None) -> IOTicket:
         """Coupled write: blocks until the rows land (the warp holds its
         slot for the whole program/flush, collapsing queue depth)."""
         t0 = time.perf_counter()
@@ -690,8 +849,11 @@ class SyncIOEngine:
         self.stats.write_batches += 1
         fut: Future = Future()
         fut.set_result((None, virt))
-        return IOTicket(fut, len(ids), nbytes,
-                        time.perf_counter() - t0, tag, shards=1)
+        tk = IOTicket(fut, len(ids), nbytes,
+                      time.perf_counter() - t0, tag, shards=1)
+        if cq is not None:
+            cq.add(tk)
+        return tk
 
 
 class CPUManagedEngine(SyncIOEngine):

@@ -126,7 +126,8 @@ class ArrayModel:
         t_ssd = ssd.io_time(per, bytes_per_request,
                             queue_depth_total // max(self.n_ssds, 1))
         # transfers also cross PCIe (bounded by link bw)
-        t_pcie = n_requests * max(bytes_per_request, self.env.ssd_min_io) / self.env.pcie_bw
+        t_pcie = (n_requests * max(bytes_per_request, self.env.ssd_min_io)
+                  / self.env.pcie_bw)
         return max(t_ssd, t_pcie)
 
     def write_time(self, n_requests: int, bytes_per_request: int,
@@ -172,3 +173,14 @@ class VirtualClock:
         end = begin + duration
         self.resources[resource] = end
         return end
+
+    def busy_until(self, resource: str) -> float:
+        """Virtual time the resource frees up (0.0 if never scheduled)."""
+        return self.resources.get(resource, 0.0)
+
+    def makespan(self) -> float:
+        """Completion time of the LAST scheduled work across every
+        resource — the end-to-end virtual time of an overlapped schedule
+        (what the split-phase write benchmark compares against the serial
+        compute+write sum)."""
+        return max(self.resources.values(), default=0.0)

@@ -74,6 +74,21 @@ class MutableTierTable:
             with self._lock:
                 self._dirty[ids] = False
 
+    def clear_dirty_if_version(self, ids: np.ndarray,
+                               versions: np.ndarray) -> int:
+        """Version-checked dirty clear for SPLIT-PHASE flush completion:
+        only rows whose version still matches the snapshot taken at flush
+        SUBMIT time are cleared.  A row re-written while its flush ticket
+        was in flight is dirty *again* with a newer value — clearing it
+        unconditionally would silently drop that value at the next flush
+        barrier.  Returns the number of rows actually cleared."""
+        if not len(ids):
+            return 0
+        with self._lock:
+            ok = self._version[ids] == versions
+            self._dirty[ids[ok]] = False
+            return int(ok.sum())
+
     # -- inspection -------------------------------------------------------
     def is_dirty(self, ids: np.ndarray) -> np.ndarray:
         with self._lock:
@@ -96,3 +111,86 @@ class MutableTierTable:
     def versions(self, ids: np.ndarray) -> np.ndarray:
         with self._lock:
             return self._version[ids].copy()
+
+
+class WriteCombiner:
+    """Write-combining buffer for flush-on-demote.
+
+    Consecutive ``refresh()``/prefetch demotions often evict a handful of
+    dirty rows each — paying one storage ticket per tiny batch squanders
+    the striped engine's range coalescing.  The combiner buffers those
+    rows' values (it becomes the FRESHEST holder once the tier copy
+    drops) and releases them as ONE batched ticket when ``min_rows``
+    accumulate or a flush barrier drains it.  While a row sits here its
+    dirty bit stays set — storage is still stale — and gathers overlay
+    the buffered value over the (stale) storage read.
+
+    Merging is last-writer-wins by row id; ``drop()`` removes entries a
+    newer write-through superseded.  Thread-safe.
+    """
+
+    def __init__(self, min_rows: int = 256):
+        self.min_rows = min_rows
+        self._ids = np.empty(0, np.int64)
+        self._rows: np.ndarray | None = None
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._ids)
+
+    @property
+    def ready(self) -> bool:
+        """Enough buffered rows to justify one combined ticket."""
+        with self._lock:
+            return len(self._ids) >= self.min_rows
+
+    def add(self, ids: np.ndarray, rows: np.ndarray) -> None:
+        ids = np.asarray(ids)
+        if not len(ids):
+            return
+        with self._lock:
+            if self._rows is None or not len(self._ids):
+                self._ids, self._rows = ids.copy(), np.array(rows, copy=True)
+            else:
+                from repro.core.iostack import keep_last_writer
+                self._ids, self._rows = keep_last_writer(
+                    np.concatenate([self._ids, ids]),
+                    np.concatenate([self._rows, rows]))
+
+    def lookup(self, ids: np.ndarray):
+        """Overlay for a gather/admission of ``ids``: ``(mask, rows)``
+        where ``rows`` are the buffered values for ``ids[mask]`` — or
+        ``None`` when nothing matches.  Buffered values are fresher than
+        storage by construction."""
+        with self._lock:
+            if self._rows is None or not len(self._ids):
+                return None
+            mask = np.isin(ids, self._ids)
+            if not mask.any():
+                return None
+            sorter = np.argsort(self._ids, kind="stable")
+            at = sorter[np.searchsorted(self._ids[sorter], ids[mask])]
+            return mask, self._rows[at].copy()
+
+    def take(self):
+        """Pop everything buffered (for the combined ticket); the caller
+        owns flushing the returned ``(ids, rows)``."""
+        with self._lock:
+            ids, rows = self._ids, self._rows
+            self._ids, self._rows = np.empty(0, np.int64), None
+            return ids, rows
+
+    def drop(self, ids: np.ndarray) -> np.ndarray:
+        """Remove entries a newer write superseded (write-through made
+        storage current, or a promotion made a tier the freshest holder).
+        Returns the ids actually removed."""
+        with self._lock:
+            if not len(self._ids):
+                return np.empty(0, np.int64)
+            keep = ~np.isin(self._ids, ids)
+            dropped = self._ids[~keep]
+            self._ids = self._ids[keep]
+            if self._rows is not None:
+                self._rows = self._rows[keep]
+            return dropped

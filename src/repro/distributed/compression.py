@@ -9,7 +9,6 @@ Pure function-transform style: wraps an optimizer-facing gradient tree.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +68,7 @@ def compressed_grad_tree(grads, error_state):
 
 def wire_bytes(grads) -> tuple[int, int]:
     """(fp32 bytes, int8+scale bytes) for the gradient tree."""
-    raw = sum(l.size * 4 for l in jax.tree.leaves(grads))
-    comp = sum(l.size + (l.size // BLOCK + 1) * 4
-               for l in jax.tree.leaves(grads))
+    raw = sum(a.size * 4 for a in jax.tree.leaves(grads))
+    comp = sum(a.size + (a.size // BLOCK + 1) * 4
+               for a in jax.tree.leaves(grads))
     return raw, comp

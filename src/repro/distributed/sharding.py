@@ -15,7 +15,6 @@ instead, which is divisible for every assigned architecture).
 """
 from __future__ import annotations
 
-import math
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any
@@ -50,7 +49,8 @@ class ShardingCtx:
             return 1
         if isinstance(mesh_axes, str):
             mesh_axes = (mesh_axes,)
-        return int(np.prod([self.mesh.shape[a] for a in mesh_axes if a in self.mesh.shape]))
+        return int(np.prod([self.mesh.shape[a] for a in mesh_axes
+                            if a in self.mesh.shape]))
 
     def resolve(self, name, dim_size):
         """Logical name -> mesh axes for one dim, dropping non-dividing axes."""
@@ -92,7 +92,8 @@ def use_mesh(mesh: Mesh, rules: dict | None = None):
     ctx = ShardingCtx(mesh, {**DEFAULT_RULES, **(rules or {})})
     _ACTIVE.append(ctx)
     try:
-        with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") else _null():
+        has_use = hasattr(jax.sharding, "use_mesh")
+        with jax.sharding.use_mesh(mesh) if has_use else _null():
             yield ctx
     finally:
         _ACTIVE.pop()

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +65,9 @@ class TrainerConfig:
     embedding_flush_every: int = 0  # batches between flush barriers
                                    # (0 = flush only at epoch end / demote)
     write_policy: str = "writeback"  # writeback | writethrough (ablation)
+    write_combine_rows: int = 0    # coalesce flush-on-demote batches smaller
+                                   # than this into one combined ticket
+                                   # (0 = one ticket per demotion batch)
     seed: int = 0
 
 
@@ -85,8 +88,13 @@ class TrainableEmbeddingTable:
         self.cache = cache
         self.lr = lr
 
-    def apply_grads(self, ids: np.ndarray, grads: np.ndarray):
-        return self.cache.apply_delta(ids, -self.lr * np.asarray(grads))
+    def apply_grads(self, ids: np.ndarray, grads: np.ndarray,
+                    wait: bool = True):
+        """``wait=False`` leaves the storage write-through ticket in
+        flight (split-phase) — the caller completes it a batch later via
+        ``cache.complete_write``, hiding the write under device compute."""
+        return self.cache.apply_delta(ids, -self.lr * np.asarray(grads),
+                                      wait=wait)
 
 
 class OutOfCoreGNNTrainer:
@@ -119,7 +127,8 @@ class OutOfCoreGNNTrainer:
                              hysteresis=cfg.policy_hysteresis)
         self.cache = HeteroCache(store, None, dev_rows, host_rows, self.io,
                                  policy=policy,
-                                 write_policy=cfg.write_policy)
+                                 write_policy=cfg.write_policy,
+                                 write_combine_rows=cfg.write_combine_rows)
 
         # --- model + optimizer -------------------------------------------
         key = jax.random.key(cfg.seed)
@@ -139,6 +148,9 @@ class OutOfCoreGNNTrainer:
         self._pf_pending = None
         self._pf_lock = threading.Lock()
         self._wb_batches = 0
+        # split-phase embedding write-back: batch i's storage ticket stays
+        # in flight until batch i+1's operator completes it
+        self._wb_pending = None
 
     # -----------------------------------------------------------------
     def _operators(self):
@@ -203,20 +215,51 @@ class OutOfCoreGNNTrainer:
 
         def op_embedding_writeback(ctx):
             # gradient-updated embedding rows ride the cache write path on
-            # the io resource: resident rows mutate in their tier and turn
-            # dirty (flush-on-demote / epoch flush covers storage), cold
-            # rows write through — MariusGNN's trainable-embedding workload
-            # on top of Helios's IO stack
+            # the io resource, SPLIT-PHASE: resident rows mutate in their
+            # tier at submit (dirty; flush-on-demote / epoch flush covers
+            # storage), cold rows' write-through ticket stays IN FLIGHT
+            # across pipeline batches — this batch submits its own ticket
+            # and completes the one the previous batch left pending, so
+            # the storage write hides under a whole batch of other work
             mb = ctx["mb"]
             mask = mb.node_mask
-            res = self.embeddings.apply_grads(mb.nodes[mask],
-                                              ctx["feat_grad"][mask])
-            ctx["writeback"] = res
+            # the RMW read inside apply_grads blocks on a storage ticket —
+            # keep it OUTSIDE _pf_lock so the prefetch operator (which
+            # contends on the same lock for its double-buffer swap) never
+            # serializes behind it
+            pw = self.embeddings.apply_grads(mb.nodes[mask],
+                                             ctx["feat_grad"][mask],
+                                             wait=False)
+            with self._pf_lock:
+                prev, self._wb_pending = self._wb_pending, pw
+                ctx["writeback"] = pw.result
+                # snapshot NOW: the next batch may complete this ticket
+                # (mutating result.virtual_s) once the swap is visible
+                ctx["wb_submit_virt"] = pw.result.virtual_s
+            if prev is not None:
+                # incremental virt only: the submit-side charge (the RMW
+                # read) was billed to the batch that issued it
+                before = prev.result.virtual_s
+                ctx["wb_prev_virt"] = (self.cache.complete_write(prev)
+                                       .virtual_s - before)
             if cfg.embedding_flush_every > 0:
                 with self._pf_lock:
                     self._wb_batches += 1
                     due = self._wb_batches % cfg.embedding_flush_every == 0
                 if due:
+                    # harvest the just-submitted ticket HERE so its virt is
+                    # charged to this operator — the barrier would complete
+                    # it anyway, but then its storage seconds would vanish
+                    # from the pipeline cost model (FlushResult only carries
+                    # the barrier ticket)
+                    with self._pf_lock:
+                        cur, self._wb_pending = self._wb_pending, None
+                    if cur is not None:
+                        before = cur.result.virtual_s
+                        ctx["wb_prev_virt"] = (
+                            ctx.get("wb_prev_virt", 0.0)
+                            + self.cache.complete_write(cur).virtual_s
+                            - before)
                     ctx["wb_flush"] = self.cache.flush()
 
         # virtual costs under the paper envelope
@@ -261,10 +304,15 @@ class OutOfCoreGNNTrainer:
             r = ctx.get("writeback")
             if r is None:
                 return 0.0
-            # tier writes move bytes over HBM/DRAM; storage writes cost
-            # the virtual seconds their ticket actually resolved with
+            # tier writes move bytes over HBM/DRAM; this batch's RMW read
+            # rides r.virtual_s at submit time, while the storage WRITE
+            # ticket is charged one batch later, when the operator that
+            # completes it harvests the virtual seconds it resolved with
+            # (wb_prev_virt) — the split-phase cadence in the cost model
             virt = (r.device_rows * rb / env.hbm_bw
-                    + r.host_rows * rb / env.dram_bw + r.virtual_s)
+                    + r.host_rows * rb / env.dram_bw
+                    + ctx.get("wb_submit_virt", 0.0)
+                    + ctx.get("wb_prev_virt", 0.0))
             fl = ctx.get("wb_flush")
             return virt + (fl.virtual_s if fl is not None else 0.0)
 
@@ -333,10 +381,14 @@ class OutOfCoreGNNTrainer:
         # land the last double-buffered prefetch ticket left in flight
         with self._pf_lock:
             pf, self._pf_pending = self._pf_pending, None
+            wb, self._wb_pending = self._wb_pending, None
         if pf is not None:
             self.cache.complete_prefetch(pf)
+        # harvest the final split-phase embedding write ticket, then the
         # epoch barrier: every dirty embedding row becomes durable on
         # storage through ONE batched (striped, coalesced) write ticket
+        if wb is not None:
+            self.cache.complete_write(wb)
         epoch_flush = (self.cache.flush() if cfg.train_embeddings else None)
         out["cache"] = {
             "hit_rate": self.cache.stats.hit_rate,

@@ -9,7 +9,6 @@ gather-scatter unit needed, the DMA engine does the indirection.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,8 @@ def wkv(r, k, v, logw, u, use_pallas: bool = False, interpret: bool = True,
         T = r.shape[1]
         pad = (-T) % chunk
         if pad:
-            z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+            def z(a):
+                return jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
             out = wkv_pallas(z(r), z(k), z(v),
                              jnp.pad(logw, ((0, 0), (0, pad), (0, 0)),
                                      constant_values=-1e-4),

@@ -39,8 +39,9 @@ def segment_sum_pallas(msgs: jax.Array, seg_ids: jax.Array, n_segments: int,
         msgs = jnp.pad(msgs, ((0, pad), (0, 0)))
         seg_ids = jnp.pad(seg_ids, (0, pad), constant_values=n_segments)
     grid = (msgs.shape[0] // block_e,)
-    kernel = lambda m, s, o: _segment_kernel(m, s, o, n_segments=n_segments,
-                                             block_e=block_e)
+    def kernel(m, s, o):
+        return _segment_kernel(m, s, o, n_segments=n_segments,
+                               block_e=block_e)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -27,7 +27,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config, list_configs
 from repro.distributed.sharding import (ShardingCtx, param_specs, use_mesh,

@@ -278,7 +278,8 @@ def _fusion_bytes(op: Op, comp: Computation, sub: Computation) -> float:
         consumers = [o for o in sub.ops if pop.name in o.operands]
         if pop.name in dus_buffers:
             pass  # in-place updated buffer: write counted below
-        elif consumers and all(o.kind in ("dynamic-slice", "gather") for o in consumers):
+        elif consumers and all(o.kind in ("dynamic-slice", "gather")
+                               for o in consumers):
             read += sum(_shape_bytes(o.out_shapes) for o in consumers)
         else:
             read += full

@@ -6,7 +6,6 @@ multi-pod: 2x16x16 = 512 chips with a leading "pod" axis over DCI.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import numpy as np

@@ -17,7 +17,6 @@ Design notes (TPU):
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +38,8 @@ def init_attention(key, d_model, n_heads, n_kv, head_dim, dtype,
         "wq": dense_init(ks[0], stack + (d_model, n_heads * head_dim), dtype, d_model),
         "wk": dense_init(ks[1], stack + (d_model, n_kv * head_dim), dtype, d_model),
         "wv": dense_init(ks[2], stack + (d_model, n_kv * head_dim), dtype, d_model),
-        "wo": dense_init(ks[3], stack + (n_heads * head_dim, d_model), dtype, n_heads * head_dim),
+        "wo": dense_init(ks[3], stack + (n_heads * head_dim, d_model), dtype,
+                         n_heads * head_dim),
     }
     if qkv_bias:
         p["bq"] = jnp.zeros(stack + (n_heads * head_dim,), dtype)
@@ -141,7 +141,8 @@ def attend(q, k, v, *, causal=True, window=0, q_chunk=512, q_offset=0,
         if window and causal:
             # slice KV to [start, start + W + Cq) around the chunk
             span = window + q_chunk
-            start = jnp.clip(c * q_chunk + q_chunk - span + q_offset, 0, max(T - span, 0))
+            start = jnp.clip(c * q_chunk + q_chunk - span + q_offset, 0,
+                             max(T - span, 0))
             if span >= T:
                 k_s, v_s, kv_p = k, v, kv_pos
             else:
@@ -188,8 +189,10 @@ def decode_attend(q, k_cache, v_cache, pos):
 
 def cache_update(k_cache, v_cache, k_new, v_new, pos):
     """Write k/v at time index ``pos`` (decode) or [0, S) (prefill)."""
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
     return k_cache, v_cache
 
 

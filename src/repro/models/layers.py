@@ -25,7 +25,8 @@ def _normal(key, shape, dtype, stddev):
 
 def dense_init(key, shape, dtype, fan_in: int | None = None):
     """Truncated-normal-ish init, 1/sqrt(fan_in)."""
-    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    fan_in = (fan_in if fan_in is not None
+              else shape[-2] if len(shape) >= 2 else shape[-1])
     return _normal(key, shape, dtype, 1.0 / math.sqrt(max(fan_in, 1)))
 
 
@@ -97,7 +98,8 @@ def apply_rope(x, positions, theta: float):
 # MLPs
 # ---------------------------------------------------------------------------
 
-def init_mlp(key, d_model, d_ff, act: str, dtype, bias: bool = False, stack: tuple = ()):
+def init_mlp(key, d_model, d_ff, act: str, dtype, bias: bool = False,
+             stack: tuple = ()):
     ks = jax.random.split(key, 3)
     sh_in, sh_out = stack + (d_model, d_ff), stack + (d_ff, d_model)
     p = {}

@@ -11,7 +11,6 @@ HLO size is depth-independent.  ``forward`` (train/prefill) and ``decode_one``
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -163,10 +162,12 @@ def forward(params, cfg: ModelConfig, x, q_chunk: int = 512):
         return _forward_hybrid(params, cfg, x, q_chunk)
     if cfg.block == "rwkv":
         x = apply_norm(x, params["ln0"], cfg.norm)
-        body = lambda c, lp: _acc(_rwkv_layer_fwd(c[0], lp, cfg), c[1])
+        def body(c, lp):
+            return _acc(_rwkv_layer_fwd(c[0], lp, cfg), c[1])
     else:
-        body = lambda c, lp: _acc(
-            _attn_layer_fwd(c[0], lp, cfg, cfg.window, q_chunk), c[1])
+        def body(c, lp):
+            return _acc(
+                _attn_layer_fwd(c[0], lp, cfg, cfg.window, q_chunk), c[1])
     if cfg.remat:
         body = jax.checkpoint(body)
     (x, aux), _ = jax.lax.scan(lambda c, lp: (body(c, lp), None),
@@ -246,11 +247,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
         length = min(cfg.window or max_len, max_len)
         rep = {}
         for i, kind in enumerate(cfg.pattern):
-            rep[f"p{i}_{kind}"] = rec_state(n_rep) if kind == "rec" else attn_cache(n_rep, length)
+            rep[f"p{i}_{kind}"] = (rec_state(n_rep) if kind == "rec"
+                                   else attn_cache(n_rep, length))
         cache = {"repeat": rep}
         if n_tail:
             cache["tail"] = {f"t{i}_{cfg.pattern[i]}":
-                             (rec_state(1) if cfg.pattern[i] == "rec" else attn_cache(1, length))
+                             (rec_state(1) if cfg.pattern[i] == "rec"
+                              else attn_cache(1, length))
                              for i in range(n_tail)}
         return cache
     if cfg.block == "rwkv":
@@ -393,18 +396,19 @@ def decode_one(params, cfg: ModelConfig, x, cache, pos):
     kv_ax = ("batch", "kv_seq", None, None)
 
     def body(carry, lp):
-        h, full_cache, l = carry
+        h, full_cache, i = carry
         c_l = jax.tree.map(
-            lambda a: annotate(jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False),
-                               *kv_ax),
+            lambda a: annotate(
+                jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                *kv_ax),
             full_cache)
         h2, c_new = _attn_layer_decode(h, lp, cfg, c_l, pos, cfg.window)
         full_cache = jax.tree.map(
             lambda buf, n: annotate(jax.lax.dynamic_update_index_in_dim(
-                buf, annotate(n.astype(buf.dtype), *kv_ax), l, 0),
+                buf, annotate(n.astype(buf.dtype), *kv_ax), i, 0),
                 None, *kv_ax),
             full_cache, c_new)
-        return (h2, full_cache, l + 1), None
+        return (h2, full_cache, i + 1), None
 
     (x, cache, _), _ = jax.lax.scan(body, (x, cache, jnp.int32(0)),
                                     params["blocks"])

@@ -52,12 +52,14 @@ def init_moe(key, d_model, mcfg: MoEConfig, dtype, act: str, stack: tuple = ()):
         },
     }
     if mcfg.n_shared:
-        p["shared"] = init_mlp(ks[4], d_model, mcfg.n_shared * F, act, dtype, stack=stack)
+        p["shared"] = init_mlp(ks[4], d_model, mcfg.n_shared * F, act,
+                               dtype, stack=stack)
     return p
 
 
 def _capacity(tokens_per_group: int, mcfg: MoEConfig) -> int:
-    c = int(math.ceil(tokens_per_group * mcfg.top_k * mcfg.capacity_factor / mcfg.e_pad))
+    c = int(math.ceil(tokens_per_group * mcfg.top_k * mcfg.capacity_factor
+                      / mcfg.e_pad))
     return max(4, -(-c // 4) * 4)   # round up to a multiple of 4
 
 

@@ -33,7 +33,8 @@ def init_time_mix(key, d_model, dtype, stack: tuple = ()):
     return {
         "mu_x": jnp.zeros(stack + (D,), jnp.float32),
         "mix_w1": dense_init(ks[0], stack + (D, MIX_KINDS * LORA_MIX), jnp.float32, D),
-        "mix_w2": dense_init(ks[1], stack + (MIX_KINDS, LORA_MIX, D), jnp.float32, LORA_MIX),
+        "mix_w2": dense_init(ks[1], stack + (MIX_KINDS, LORA_MIX, D),
+                             jnp.float32, LORA_MIX),
         "w0": -6.0 * jnp.ones(stack + (D,), jnp.float32),
         "wA": dense_init(ks[2], stack + (D, LORA_DECAY), jnp.float32, D),
         "wB": dense_init(ks[3], stack + (LORA_DECAY, D), jnp.float32, LORA_DECAY),
@@ -76,7 +77,8 @@ def ddlerp(x, xx, p):
     m = jnp.tanh(base @ p["mix_w1"])                       # (B,T,5*R)
     m = m.reshape(m.shape[:-1] + (MIX_KINDS, LORA_MIX))
     offs = jnp.einsum("btkr,krd->kbtd", m, p["mix_w2"])    # (5,B,T,D)
-    outs = [(x32 + sx * (p["mu_x"] + offs[i])).astype(x.dtype) for i in range(MIX_KINDS)]
+    outs = [(x32 + sx * (p["mu_x"] + offs[i])).astype(x.dtype)
+            for i in range(MIX_KINDS)]
     return outs  # r, w, k, v, g order
 
 
@@ -94,11 +96,13 @@ def wkv_chunked(r, k, v, logw, u, state, chunk: int = 16):
     C = min(chunk, T)
     pad = (-T) % C
     if pad:
-        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        def z(a):
+            return jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
         r, k, v = z(r), z(k), z(v)
         logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
     nc = r.shape[1] // C
-    resh = lambda a: a.reshape(B, nc, C, H, N).transpose(1, 0, 2, 3, 4)
+    def resh(a):
+        return a.reshape(B, nc, C, H, N).transpose(1, 0, 2, 3, 4)
     rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(logw)
 
     tri = jnp.tril(jnp.ones((C, C), jnp.float32), k=-1)     # strict lower
@@ -186,7 +190,8 @@ def _time_mix_one(x, p, head_size, x_prev, state):
     x3 = x[:, None, :]
     xx3 = x_prev[:, None, :]
     x_r, x_w, x_k, x_v, x_g = ddlerp(x3, xx3, p)
-    sq = lambda a: a[:, 0, :]
+    def sq(a):
+        return a[:, 0, :]
     r = (sq(x_r) @ p["w_r"]).astype(jnp.float32).reshape(B, H, head_size)
     k = (sq(x_k) @ p["w_k"]).astype(jnp.float32).reshape(B, H, head_size)
     v = (sq(x_v) @ p["w_v"]).astype(jnp.float32).reshape(B, H, head_size)

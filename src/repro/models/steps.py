@@ -7,14 +7,11 @@ needs no resharding collective.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeSpec
-from repro.distributed.sharding import annotate
 from repro.models import encdec, lm
 
 Z_LOSS = 1e-4

@@ -8,7 +8,6 @@ host-offloaded-optimizer tier.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -17,7 +16,8 @@ import jax.numpy as jnp
 
 class Optimizer(NamedTuple):
     init: Callable[[Any], Any]
-    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params) -> (params', state')
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params)
+                                               # -> (params', state')
     name: str = "opt"
 
 
@@ -37,7 +37,8 @@ def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
 
 def global_norm(tree):
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(a.astype(jnp.float32)))
+                        for a in leaves))
 
 
 def clip_by_global_norm(grads, max_norm: float):
@@ -51,7 +52,8 @@ def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
     lr_fn = lr if callable(lr) else constant_lr(lr)
 
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        def zeros(p):
+            return jnp.zeros(p.shape, moment_dtype)
         return {"step": jnp.zeros((), jnp.int32),
                 "m": jax.tree.map(zeros, params),
                 "v": jax.tree.map(zeros, params)}
@@ -75,9 +77,11 @@ def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
                     m32.astype(moment_dtype), v32.astype(moment_dtype))
 
         out = jax.tree.map(upd, params, grads, state["m"], state["v"])
-        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        def is_tup(x):
+            return isinstance(x, tuple)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=is_tup)
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=is_tup)
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=is_tup)
         return new_p, {"step": step, "m": new_m, "v": new_v}
 
     return Optimizer(init, update, "adamw")
@@ -123,7 +127,9 @@ def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0,
                 vr = beta * v["vr"] + (1 - beta) * g2.mean(-1)
                 vc = beta * v["vc"] + (1 - beta) * g2.mean(-2)
                 denom = jnp.sqrt(vr[..., None] * vc[..., None, :]
-                                 / jnp.maximum(vr.mean(-1, keepdims=True)[..., None], eps))
+                                 / jnp.maximum(
+                                     vr.mean(-1, keepdims=True)[..., None],
+                                     eps))
                 nv = {"vr": vr, "vc": vc}
             else:
                 v2 = beta * v["v"] + (1 - beta) * g2

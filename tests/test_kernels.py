@@ -88,7 +88,8 @@ def test_wkv_kernel_matches_model_path():
     u = jax.random.normal(keys[0], (H, N)) * 0.3
     s0 = jnp.zeros((B, H, N, N))
     y_model, _ = wkv_chunked(r, k, v, logw, u, s0, chunk=16)
-    resh = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, N)
+    def resh(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, T, N)
     y_kernel = wkv(resh(r), resh(k), resh(v), resh(logw),
                    jnp.tile(u, (B, 1)), use_pallas=True, interpret=True)
     y_kernel = y_kernel.reshape(B, H, T, N).transpose(0, 2, 1, 3)

@@ -35,7 +35,7 @@ def test_dropless_grads_flow(setup):
     g = jax.grad(lambda pp: moe_block(x, pp, md)[0].sum())(p)
     for leaf in jax.tree.leaves(g):
         assert bool(jnp.all(jnp.isfinite(leaf)))
-    gn = sum(float(jnp.abs(l).sum()) for l in jax.tree.leaves(g))
+    gn = sum(float(jnp.abs(a).sum()) for a in jax.tree.leaves(g))
     assert gn > 0
 
 

@@ -1,0 +1,193 @@
+"""Out-of-order per-shard completion: tickets resolve when THEIR shards
+finish, poll/try_complete never block, CompletionQueue harvests in
+completion order, and per-shard FIFO keeps reads after in-flight writes."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.iostack import (AsyncIOEngine, CompletionQueue,
+                                CPUManagedEngine, FeatureStore, SyncIOEngine,
+                                keep_last_writer)
+
+N_ROWS, ROW_DIM, N_SHARDS = 2048, 8, 4
+
+
+@pytest.fixture()
+def store(tmp_path):
+    return FeatureStore(str(tmp_path / "f"), n_rows=N_ROWS, row_dim=ROW_DIM,
+                        n_shards=N_SHARDS, create=True, rng_seed=0)
+
+
+@pytest.fixture()
+def wstore(tmp_path):
+    return FeatureStore(str(tmp_path / "w"), n_rows=N_ROWS, row_dim=ROW_DIM,
+                        n_shards=N_SHARDS, create=True, rng_seed=0,
+                        writable=True)
+
+
+ENGINES = [
+    ("helios", lambda s: AsyncIOEngine(s)),
+    ("gids", lambda s: SyncIOEngine(s)),
+    ("cpu", lambda s: CPUManagedEngine(s)),
+]
+
+
+# ---------------------------------------------------------------------------
+# ticket poll / try_complete
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [m for _, m in ENGINES],
+                         ids=[n for n, _ in ENGINES])
+def test_poll_and_try_complete_contract(store, make):
+    eng = make(store)
+    ids = np.arange(0, N_ROWS, 7)
+    tk = eng.submit(ids)
+    data, virt = tk.wait()
+    assert tk.poll()                        # resolved => poll true
+    again = tk.try_complete()               # harvest after wait: same result
+    assert again is not None and again[1] == virt
+    np.testing.assert_array_equal(again[0], store.read_rows(ids))
+    # an empty batch resolves at submit on every engine
+    tk0 = eng.submit(np.array([], np.int64))
+    assert tk0.poll() and tk0.try_complete() is not None
+    eng.close()
+
+
+def test_try_complete_nonblocking_while_in_flight(store):
+    """try_complete on an unfinished ticket returns None and does NOT wait
+    — the split-phase caller's poll-loop primitive."""
+
+    class SlowEngine(AsyncIOEngine):
+        def _service_shard(self, shard, offs, dest, buf):
+            time.sleep(0.25)
+            return super()._service_shard(shard, offs, dest, buf)
+
+    eng = SlowEngine(store)
+    tk = eng.submit(np.arange(64))
+    t0 = time.perf_counter()
+    early = tk.try_complete()
+    assert time.perf_counter() - t0 < 0.2   # did not block on the service
+    assert early is None or tk.poll()       # raced completion is fine
+    data, _ = tk.wait()
+    np.testing.assert_array_equal(data, store.read_rows(np.arange(64)))
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# CompletionQueue: out-of-order harvest, identical results to FIFO waits
+# ---------------------------------------------------------------------------
+
+def test_completion_queue_counts(store):
+    cq = CompletionQueue()
+    assert cq.pending == 0 and cq.try_pop() is None and cq.harvest() == []
+    with SyncIOEngine(store) as eng:
+        tk = eng.submit(np.arange(8), cq=cq)
+        assert cq.pending == 1
+        assert cq.pop() is tk
+        assert cq.pending == 0
+        eng.submit(np.arange(4), cq=cq)
+        eng.submit(np.arange(2), cq=cq)
+        got = cq.harvest(block=True)
+        assert len(got) == 2 and cq.pending == 0
+
+
+@pytest.mark.parametrize("make", [m for _, m in ENGINES],
+                         ids=[n for n, _ in ENGINES])
+def test_ooo_harvest_matches_fifo_results(store, make):
+    """Deterministic mirror of the hypothesis property: the SAME batches
+    submitted twice — once drained FIFO via wait(), once harvested in
+    completion order via CompletionQueue — yield identical per-ticket
+    payloads under every engine mode."""
+    rng = np.random.default_rng(0)
+    batches = [rng.integers(0, N_ROWS, rng.integers(1, 400))
+               for _ in range(12)]
+    eng = make(store)
+    fifo = [eng.submit(b).wait()[0] for b in batches]
+
+    cq = CompletionQueue()
+    tickets = [eng.submit(b, cq=cq) for b in batches]
+    by_ticket = {}
+    while cq.pending:
+        tk = cq.pop()
+        by_ticket[id(tk)] = tk.wait()[0]    # wait() is a no-op: already done
+    assert len(by_ticket) == len(batches)
+    for tk, b, ref in zip(tickets, batches, fifo):
+        np.testing.assert_array_equal(by_ticket[id(tk)], ref)
+        np.testing.assert_array_equal(by_ticket[id(tk)], store.read_rows(b))
+    eng.close()
+
+
+@pytest.mark.parametrize("make", [m for _, m in ENGINES],
+                         ids=[n for n, _ in ENGINES])
+def test_ooo_write_harvest_matches_fifo(wstore, make):
+    """Write tickets harvested out of order land exactly the same bytes as
+    a FIFO drain: last-writer-wins dedupe happens at SUBMIT time, so the
+    harvest order can never change the stored outcome."""
+    rng = np.random.default_rng(1)
+    eng = make(wstore)
+    cq = CompletionQueue()
+    shadow = wstore.read_rows(np.arange(N_ROWS))
+    for _ in range(8):
+        ids = rng.integers(0, N_ROWS, 200)
+        rows = rng.standard_normal((200, ROW_DIM)).astype(np.float32)
+        eng.submit_write(ids, rows, cq=cq)
+        ki, kr = keep_last_writer(ids, rows)
+        shadow[ki] = kr
+    for tk in cq.drain():
+        assert tk.poll()
+    np.testing.assert_array_equal(wstore.read_rows(np.arange(N_ROWS)), shadow)
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# straggler shard: unaffected tickets complete first
+# ---------------------------------------------------------------------------
+
+def test_straggler_shard_does_not_gate_other_tickets(store):
+    """Ticket A rides only the (artificially slow) shard 0; ticket B,
+    submitted AFTER A, touches only shard 1.  With per-shard completion
+    queues B resolves while A is still in service — the CompletionQueue
+    hands B back first, and A still completes correctly afterwards."""
+
+    class StragglerEngine(AsyncIOEngine):
+        def _service_shard(self, shard, offs, dest, buf):
+            if shard == 0:
+                time.sleep(0.4)
+            return super()._service_shard(shard, offs, dest, buf)
+
+    eng = StragglerEngine(store, worker_budget=0.5)     # 4 workers
+    a_ids = np.arange(0, N_ROWS, N_SHARDS)              # shard 0 only
+    b_ids = np.arange(1, N_ROWS, N_SHARDS)              # shard 1 only
+    cq = CompletionQueue()
+    ta = eng.submit(a_ids, cq=cq)
+    tb = eng.submit(b_ids, cq=cq)
+    first = cq.pop(timeout=5.0)
+    assert first is tb                      # B finished ahead of A
+    assert not ta.poll()                    # A genuinely still in flight
+    second = cq.pop(timeout=5.0)
+    assert second is ta
+    np.testing.assert_array_equal(ta.wait()[0], store.read_rows(a_ids))
+    np.testing.assert_array_equal(tb.wait()[0], store.read_rows(b_ids))
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# per-shard FIFO: a read submitted after an IN-FLIGHT write observes it
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("striped", [True, False], ids=["striped", "legacy"])
+def test_read_after_inflight_write_same_shard(wstore, striped):
+    eng = AsyncIOEngine(wstore, striped=striped)
+    rng = np.random.default_rng(2)
+    for _ in range(6):
+        ids = rng.integers(0, N_ROWS, 128)
+        rows = rng.standard_normal((128, ROW_DIM)).astype(np.float32)
+        wtk = eng.submit_write(ids, rows)   # NOT waited
+        data, _ = eng.submit(ids).wait()    # submitted while write in flight
+        ki, kr = keep_last_writer(ids, rows)
+        sub = {i: r for i, r in zip(ki.tolist(), kr)}
+        np.testing.assert_array_equal(
+            data, np.stack([sub[i] for i in ids.tolist()]))
+        wtk.wait()
+    eng.close()

@@ -245,6 +245,44 @@ def test_writeback_read_your_writes(mode, ops, tiers):
     cache.close()
 
 
+@pytest.mark.parametrize("mode", ["helios", "gids", "cpu"])
+@given(batches=st.lists(hnp.arrays(np.int64, st.integers(0, 120),
+                                   elements=st.integers(0, 95)),
+                        min_size=1, max_size=8),
+       order_seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_ooo_harvest_matches_fifo_property(mode, batches, order_seed):
+    """Ticket results are IDENTICAL whether the caller drains them FIFO
+    via wait() or harvests them in an arbitrary out-of-order interleaving
+    (CompletionQueue + random try_complete polling) — under all three
+    engine modes, for ANY batch multiset.  Completion order must never
+    leak into payloads."""
+    from repro.core.iostack import (CompletionQueue, CPUManagedEngine,
+                                    SyncIOEngine)
+    store = _prop_store()
+    if mode == "helios":
+        eng = _prop_engine(0)           # shared striped AsyncIOEngine
+    else:
+        eng = (SyncIOEngine if mode == "gids" else CPUManagedEngine)(store)
+    fifo = [eng.submit(b).wait()[0] for b in batches]
+    cq = CompletionQueue()
+    tickets = [eng.submit(b, cq=cq) for b in batches]
+    got = {}
+    rng = np.random.default_rng(order_seed)
+    while len(got) < len(tickets):
+        if rng.integers(0, 2) and cq.pending:
+            tk = cq.pop()
+            got[id(tk)] = tk.wait()[0]
+        else:                            # poll a random ticket directly
+            tk = tickets[int(rng.integers(0, len(tickets)))]
+            out = tk.try_complete()
+            if out is not None and id(tk) not in got:
+                got[id(tk)] = out[0]
+    for tk, ref in zip(tickets, fifo):
+        np.testing.assert_array_equal(got[id(tk)], ref)
+    cq.drain()
+
+
 @given(n_rows=st.integers(8, 64), row_dim=st.integers(1, 5),
        n_shards=st.integers(1, 4), seed=st.integers(0, 99))
 @settings(max_examples=10, deadline=None)

@@ -22,7 +22,8 @@ def test_optimizer_converges_quadratic(opt):
     params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array([[1.0, 2.0],
                                                            [3.0, 4.0]])}
     state = opt.init(params)
-    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
     l0 = float(loss(params))
     for _ in range(60):
         grads = jax.grad(loss)(params)

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.configs import get_config
@@ -50,7 +49,7 @@ def test_lm_train_with_out_of_core_data(tmp_path):
         losses.append(float(m["loss"]))
     mgr.save(6, state, extra={"data_iter": it.checkpoint_state()})
     assert losses[-1] < losses[0]
-    assert all(np.isfinite(l) for l in losses)
+    assert all(np.isfinite(x) for x in losses)
     # resume
     restored, extra = mgr.restore()
     assert extra["step"] == 6

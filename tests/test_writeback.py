@@ -463,6 +463,266 @@ def test_flush_barrier_runs_even_without_dirty_rows(wstore):
 
 
 # ---------------------------------------------------------------------------
+# split-phase writes: tickets in flight, version-checked revalidation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda s: AsyncIOEngine(s),
+    lambda s: AsyncIOEngine(s, striped=False),
+    lambda s: SyncIOEngine(s),
+    lambda s: CPUManagedEngine(s),
+], ids=["helios", "helios-legacy", "gids", "cpu"])
+def test_write_planned_split_phase_read_your_writes(wstore, make):
+    """write_planned(wait=False) leaves the storage ticket in flight, yet
+    a gather issued immediately after MUST observe the written values
+    (per-shard FIFO ordering) — and complete_write is idempotent."""
+    from repro.core.hetero_cache import PendingWrite
+    eng = make(wstore)
+    cache = HeteroCache(wstore, np.arange(N_ROWS)[::-1].astype(float),
+                        64, 128, eng)
+    rng = np.random.default_rng(7)
+    for _ in range(4):
+        ids = rng.integers(0, N_ROWS, 150)
+        rows = _rows(rng, 150)
+        pw = cache.write_planned(ids, rows, wait=False)
+        assert isinstance(pw, PendingWrite)
+        ki, kr = keep_last_writer(ids, rows)
+        np.testing.assert_array_equal(cache.gather(ki), kr)  # in-flight RYW
+        res = cache.complete_write(pw)
+        assert res.virtual_s >= 0.0
+        assert cache.complete_write(pw) is res               # idempotent
+    cache.flush()
+    st = cache.stats
+    assert st.virtual_write_s + st.virtual_flush_s == pytest.approx(
+        eng.stats.virtual_write_s, abs=1e-12)
+    cache.close()
+    eng.close()
+
+
+def test_flush_completes_inflight_writes_before_durability(wstore):
+    """A flush() barrier must wait out split-phase write tickets submitted
+    before it — afterwards storage alone reproduces every write."""
+    eng = AsyncIOEngine(wstore)
+    cache = HeteroCache(wstore, np.arange(N_ROWS)[::-1].astype(float),
+                        0, 0, eng)                  # all writes go through
+    rng = np.random.default_rng(8)
+    pws, shadow = [], {}
+    for _ in range(5):
+        ids = rng.integers(0, N_ROWS, 100)
+        rows = _rows(rng, 100)
+        pws.append(cache.write_planned(ids, rows, wait=False))
+        ki, kr = keep_last_writer(ids, rows)
+        shadow.update(zip(ki.tolist(), kr))
+    cache.flush()                                   # no explicit completes
+    sids = np.array(sorted(shadow))
+    np.testing.assert_array_equal(wstore.read_rows(sids),
+                                  np.stack([shadow[i] for i in sids]))
+    for pw in pws:
+        assert pw.done                              # barrier harvested them
+    cache.close()
+    eng.close()
+
+
+def test_split_phase_flush_version_revalidation(wstore):
+    """A row re-written while its flush ticket is in flight must STAY
+    dirty (version-checked clear): the newer value survives to the next
+    barrier instead of being silently dropped."""
+    eng = SyncIOEngine(wstore)
+    cache = HeteroCache(wstore, np.arange(N_ROWS)[::-1].astype(float),
+                        32, 64, eng)
+    resident = int(np.where(cache.loc < 2)[0][0])
+    ids = np.array([resident])
+    v1, v2 = _rows(np.random.default_rng(9), 2)
+    cache.write_planned(ids, v1[None])
+    assert cache.n_dirty == 1
+    ef = cache.flush(wait=False)                    # barrier ticket in flight
+    cache.write_planned(ids, v2[None])              # mid-flight re-write
+    cache.flush_complete(ef)
+    assert cache.n_dirty == 1                       # v2 still pending
+    np.testing.assert_array_equal(cache.gather(ids), v2[None])
+    fr = cache.flush()
+    assert fr.rows == 1 and cache.n_dirty == 0
+    np.testing.assert_array_equal(wstore.read_rows(ids), v2[None])
+    cache.close()
+
+
+def test_apply_delta_split_phase(wstore):
+    eng = AsyncIOEngine(wstore)
+    cache = HeteroCache(wstore, np.arange(N_ROWS)[::-1].astype(float),
+                        64, 128, eng)
+    ids = np.array([int(np.where(cache.loc == t)[0][0]) for t in (0, 1, 2)])
+    base = cache.gather(ids).copy()
+    pw = cache.apply_delta(ids, np.ones((3, ROW_DIM), np.float32),
+                           wait=False)
+    np.testing.assert_allclose(cache.gather(ids), base + 1, rtol=1e-6)
+    res = cache.complete_write(pw)
+    assert res.rows == 3
+    cache.flush()
+    np.testing.assert_allclose(wstore.read_rows(ids), base + 1, rtol=1e-6)
+    cache.close()
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# write-combining buffer: small demotion batches coalesce into one ticket
+# ---------------------------------------------------------------------------
+
+def test_write_combiner_unit():
+    from repro.core.writeback import WriteCombiner
+    wc = WriteCombiner(min_rows=4)
+    assert len(wc) == 0 and not wc.ready and wc.lookup(np.array([1])) is None
+    wc.add(np.array([3, 1]), np.array([[3.0], [1.0]], np.float32))
+    wc.add(np.array([1, 5]), np.array([[10.0], [5.0]], np.float32))
+    assert len(wc) == 3 and not wc.ready            # id 1 merged, last wins
+    mask, rows = wc.lookup(np.array([0, 1, 5]))
+    np.testing.assert_array_equal(mask, [False, True, True])
+    np.testing.assert_array_equal(rows[:, 0], [10.0, 5.0])
+    assert list(wc.drop(np.array([5, 7]))) == [5]
+    wc.add(np.array([2, 4]), np.array([[2.0], [4.0]], np.float32))
+    assert wc.ready
+    ids, rows = wc.take()
+    assert len(wc) == 0
+    got = dict(zip(ids.tolist(), rows[:, 0].tolist()))
+    assert got == {3: 3.0, 1: 10.0, 2: 2.0, 4: 4.0}
+
+
+def test_write_combined_demotions_one_ticket_and_overlay(wstore):
+    """Small flush-on-demote batches land in the combiner (NO storage
+    ticket), gathers overlay the buffered values over stale storage, and
+    the flush barrier writes everything back in one batched ticket."""
+    eng = SyncIOEngine(wstore)
+    cache = HeteroCache(wstore, np.arange(N_ROWS)[::-1].astype(float),
+                        0, 64, eng, write_combine_rows=256)
+    rng = np.random.default_rng(10)
+    cached = np.where(cache.loc == 1)[0]
+    rows = _rows(rng, len(cached))
+    cache.write_planned(cached, rows)
+    wb0 = eng.stats.write_batches
+    # demote EVERY cached row (inverted hotness): small batch -> combiner
+    cache.refresh(np.arange(N_ROWS, dtype=float))
+    assert eng.stats.write_batches == wb0           # no ticket issued
+    assert (cache.loc[cached] == 2).all()
+    assert cache.n_dirty == len(cached)             # combiner = freshest
+    np.testing.assert_array_equal(cache.gather(cached), rows)   # overlay
+    assert not np.array_equal(wstore.read_rows(cached), rows)   # storage stale
+    fr = cache.flush()
+    assert fr.rows == len(cached)
+    assert eng.stats.write_batches == wb0 + 1       # ONE combined ticket
+    assert cache.n_dirty == 0
+    np.testing.assert_array_equal(wstore.read_rows(cached), rows)
+    np.testing.assert_array_equal(cache.gather(cached), rows)
+    cache.close()
+
+
+def test_write_combiner_threshold_triggers_combined_ticket(wstore):
+    """Accumulated small demotion batches exceed write_combine_rows ->
+    exactly one combined ticket goes out, covering every buffered row."""
+    eng = SyncIOEngine(wstore)
+    cache = HeteroCache(wstore, np.arange(N_ROWS)[::-1].astype(float),
+                        0, 48, eng, write_combine_rows=40)
+    rng = np.random.default_rng(11)
+    shadow = {}
+    wb0 = eng.stats.write_batches
+    # three refreshes, each dirtying + demoting 16 rows (< threshold)
+    for r in range(3):
+        hot = np.where(cache.loc == 1)[0][:16]
+        rows = _rows(rng, len(hot))
+        cache.write_planned(hot, rows)
+        shadow.update(zip(hot.tolist(), rows))
+        scores = np.arange(N_ROWS, dtype=float)
+        scores[hot] = -1.0                           # demote exactly these
+        cache.refresh(scores)
+    # 16+16+16 = 48 >= 40: the third refresh released the combined ticket
+    assert eng.stats.write_batches == wb0 + 1
+    cache.flush()
+    sids = np.array(sorted(shadow))
+    np.testing.assert_array_equal(wstore.read_rows(sids),
+                                  np.stack([shadow[i] for i in sids]))
+    cache.close()
+
+
+def test_close_drains_write_combiner(wstore):
+    """close() without a flush barrier must still release the combiner —
+    it holds the ONLY copy of demoted-dirty rows, and pre-combiner
+    flush-on-demote persisted those values at demotion time."""
+    eng = SyncIOEngine(wstore)
+    with HeteroCache(wstore, np.arange(N_ROWS)[::-1].astype(float),
+                     0, 32, eng, write_combine_rows=512) as cache:
+        rng = np.random.default_rng(13)
+        cached = np.where(cache.loc == 1)[0]
+        rows = _rows(rng, len(cached))
+        cache.write_planned(cached, rows)
+        cache.refresh(np.arange(N_ROWS, dtype=float))   # demote into combiner
+        assert cache.n_dirty == len(cached)             # buffer = only copy
+    np.testing.assert_array_equal(wstore.read_rows(cached), rows)
+    eng.close()
+
+
+def test_write_combined_row_promotion_stays_dirty(wstore):
+    """Promoting a write-combined row back into a tier takes the BUFFERED
+    value (not stale storage), keeps it dirty, and a later flush makes
+    storage agree."""
+    eng = SyncIOEngine(wstore)
+    cache = HeteroCache(wstore, np.arange(N_ROWS)[::-1].astype(float),
+                        0, 32, eng, write_combine_rows=128)
+    rng = np.random.default_rng(12)
+    victim = int(cache._host_ids[0])
+    row = _rows(rng, 1)
+    cache.write_planned(np.array([victim]), row)
+    scores = np.arange(N_ROWS, dtype=float)
+    scores[victim] = -1.0
+    cache.refresh(scores)                           # demote into combiner
+    assert cache.loc[victim] == 2
+    scores[victim] = float(N_ROWS * 10)
+    cache.refresh(scores)                           # promote straight back
+    assert cache.loc[victim] == 1
+    np.testing.assert_array_equal(cache.gather(np.array([victim])), row)
+    assert bool(cache.mut.is_dirty(np.array([victim]))[0])
+    cache.flush()
+    np.testing.assert_array_equal(wstore.read_rows(np.array([victim])), row)
+    cache.close()
+
+
+def test_random_interleaving_with_split_phase_and_combiner(wstore):
+    """The shadow-model interleaving property, now with split-phase writes
+    left in flight and the write combiner enabled: no interleaving of
+    write/gather/refresh/flush/prefetch ever loses a value."""
+    eng = AsyncIOEngine(wstore)
+    cache = HeteroCache(wstore, np.arange(N_ROWS)[::-1].astype(float),
+                        48, 96, eng, write_combine_rows=64)
+    all_ids = np.arange(N_ROWS)
+    shadow = wstore.read_rows(all_ids)
+    rng = np.random.default_rng(0xBEEF)
+    pending = []
+    for step in range(40):
+        op = rng.integers(0, 6)
+        if op == 0:
+            ids = rng.integers(0, N_ROWS, int(rng.integers(1, 64)))
+            rows = _rows(rng, len(ids))
+            pending.append(cache.write_planned(ids, rows, wait=False))
+            ki, kr = keep_last_writer(ids, rows)
+            shadow[ki] = kr
+        elif op == 1:
+            ids = rng.integers(0, N_ROWS, int(rng.integers(1, 64)))
+            np.testing.assert_array_equal(cache.gather(ids), shadow[ids])
+        elif op == 2:
+            cache.refresh(rng.standard_normal(N_ROWS))
+        elif op == 3:
+            cache.flush()
+            assert cache.n_dirty == 0
+            np.testing.assert_array_equal(wstore.read_rows(all_ids), shadow)
+        elif op == 4:
+            cache.prefetch_rows(rng.integers(0, N_ROWS, 16))
+        elif pending:
+            cache.complete_write(pending.pop(rng.integers(0, len(pending))))
+        np.testing.assert_array_equal(cache.gather(all_ids), shadow)
+    cache.flush()
+    np.testing.assert_array_equal(wstore.read_rows(all_ids), shadow)
+    cache.close()
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
 # trainable embeddings ride the write path end to end
 # ---------------------------------------------------------------------------
 
