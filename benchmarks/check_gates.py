@@ -40,6 +40,24 @@ GATES = {
                              ("oracle_bound_ok", "==", 1.0),
                              ("belady_headroom", ">=", 0.0))
     ],
+    "scale_out": [
+        # 4 workers with high-locality streams must deliver >= 0.7 * 4x
+        # one worker's aggregate virtual gather throughput
+        ("scale_out/scaling/summary", "scale_ok", ">=", 2.8),
+        # four-tier cache over the remote tier >= 2x the remote-always
+        # ablation on miss-path virtual time
+        ("scale_out/remote-cache/summary", "x_cache_vs_remote_always",
+         ">=", 2.0),
+        # single-store async engine, 1-worker fleet, and 4-worker fleet
+        # (remote tier live) return bit-identical gather results
+        ("scale_out/consistency/summary", "modes_identical", "==", 1.0),
+        # O(k) incremental policy: 100x the rows must NOT cost ~100x per
+        # batch (lazy decay + trend state, no full-table sweeps)
+        ("scale_out/policy-cost/summary", "cost_scales_ok", "==", 1.0),
+        # dead-peer injection: exactly-once completions, correct bytes,
+        # degraded owner-storage reroute actually used
+        ("scale_out/fleet/deadpeer", "reroute_ok", "==", 1.0),
+    ],
 }
 
 _OPS = {

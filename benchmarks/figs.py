@@ -514,6 +514,220 @@ def io_path():
          f"{steps['async-inline'] / steps['split-phase']:.2f}")
 
 
+def scale_out():
+    """Scale-out: partitioned stores, the remote cache tier, dead peers.
+
+    (a) scaling — N=4 simulated workers, each owning 1/4 of the rows and
+        reading a high-locality stream through its own ``RemoteIOEngine``,
+        vs the same total row volume through ONE worker.  Aggregate
+        virtual gather throughput (workers run in parallel, so the
+        aggregate clock is the slowest worker) must reach >= 0.7 * 4x the
+        single worker (gate ``scale_ok``).
+    (b) remote-cache — one worker of the 4-way fleet serving a Zipf trace
+        that is mostly peer-owned rows: the four-tier cache (device/host
+        over local storage + remote) must beat the remote-always ablation
+        (no cache tiers, every row re-fetched from its owner) by >= 2x on
+        miss-path virtual time (gate ``x_cache_vs_remote_always``).
+    (c) consistency — one request trace through the single-store async
+        engine, a 1-worker fleet, and a 4-worker fleet with the remote
+        tier live must return bit-identical rows (``reference_rows``
+        seeds content per GLOBAL row id, so partitioning cannot leak into
+        values; gate ``modes_identical``).
+    (d) policy-cost — the O(k) incremental policy (lazy-decay counters +
+        trend state): per-batch record/due cost must NOT scale with table
+        size — 100x the rows must cost well under 20x per batch (gate
+        ``cost_scales_ok``).
+    (e) fleet — dead-peer injection mid-stream: every in-flight ticket
+        still completes exactly once with correct bytes while reads of
+        the dead peer's rows degrade to owner-storage reroute (gate
+        ``reroute_ok``); plus the power-of-two-choices router balance
+        over a live replica fleet (reported, ungated).
+    """
+    import time as _time
+
+    from repro.core.iostack import CompletionQueue
+    from repro.core.policy import make_policy
+    from repro.distributed.fleet import ServingFleet
+    from repro.distributed.partition import (PartitionedFeatureStore,
+                                             make_partition, reference_rows)
+    from repro.distributed.remote_engine import RemoteIOEngine
+    from repro.ft.failures import Coordinator, FailureInjector
+
+    n_so, n_b, batch = (12000, 4, 1024) if SMOKE else (40000, 8, 2048)
+    dim, seed, n_w = 128, 17, 4
+    rng = np.random.default_rng(0)
+
+    def _pstore(tag, w):
+        return PartitionedFeatureStore(
+            os.path.join(ROOT, f"so_{tag}"), n_so, dim,
+            make_partition("hash", n_so, w), n_shards=4, create=True,
+            rng_seed=seed)
+
+    # --- (a) scaling -----------------------------------------------------
+    ps4, ps1 = _pstore("w4", n_w), _pstore("w1", 1)
+    streams = []                        # per-worker high-locality streams
+    for w in range(n_w):
+        mine, n_local = ps4.partition.rows_of(w), int(batch * 0.9)
+        streams.append([np.concatenate([
+            rng.choice(mine, n_local),
+            rng.integers(0, n_so, batch - n_local)]) for _ in range(n_b)])
+    worker_virt = []
+    for w in range(n_w):
+        with RemoteIOEngine(ps4, me=w) as eng:
+            worker_virt.append(sum(eng.submit(b).wait()[1]
+                                   for b in streams[w]))
+    total_rows = n_w * n_b * batch
+    tp4 = total_rows / max(worker_virt)         # parallel workers: the
+    with RemoteIOEngine(ps1, me=0) as eng:      # fleet clock is the max
+        virt1 = sum(eng.submit(b).wait()[1]
+                    for s in streams for b in s)
+    tp1 = total_rows / virt1
+    scale = tp4 / tp1
+    emit("scale_out/scaling/workers1", virt1 * 1e6 / (n_w * n_b),
+         f"rows_per_vs={tp1:.0f}")
+    emit("scale_out/scaling/workers4", max(worker_virt) * 1e6 / n_b,
+         f"rows_per_vs={tp4:.0f};imbalance="
+         f"{max(worker_virt) / (sum(worker_virt) / n_w):.2f}")
+    emit("scale_out/scaling/summary", 0.0,
+         f"scale_ok={scale:.2f};ideal={float(n_w):.1f}")
+
+    # --- (b) remote tier + cache vs remote-always ------------------------
+    p = 1.0 / (np.arange(n_so) + 1.0) ** 1.2
+    p /= p.sum()
+    hot = rng.permutation(n_so)                 # skew spread over owners
+    warm = [hot[rng.choice(n_so, size=batch, p=p)] for _ in range(n_b)]
+    trace = [hot[rng.choice(n_so, size=batch, p=p)] for _ in range(2 * n_b)]
+    pres = np.zeros(n_so)
+    for b in warm[:2]:
+        np.add.at(pres, b, 1.0)
+    miss_virt = {}
+    for label, dev, host in (("remote-always", 0, 0),
+                             ("cached", int(n_so * 0.05), int(n_so * 0.20))):
+        eng = RemoteIOEngine(ps4, me=0)
+        policy = make_policy("online", n_so, presample=pres,
+                             refresh_every=2, half_life=8)
+        cache = HeteroCache(ps4, None, dev, host, eng, policy=policy)
+        t = 0.0
+        for i, ids in enumerate(warm + trace):
+            pg = cache.submit_planned(ids)
+            cache.complete_planned(pg)
+            cache.maybe_refresh()
+            if i >= len(warm):          # steady state: warm-up excluded
+                t += pg.io_virt
+        miss_virt[label] = t
+        st = cache.stats
+        emit(f"scale_out/remote-cache/{label}", t * 1e6 / len(trace),
+             f"hit_rate={st.hit_rate:.3f};remote_hits={st.remote_hits};"
+             f"local_rows={eng.local_rows};remote_rows={eng.remote_rows}")
+        cache.close()
+        eng.close()
+    x_cache = miss_virt["remote-always"] / miss_virt["cached"]
+    emit("scale_out/remote-cache/summary", 0.0,
+         f"x_cache_vs_remote_always={x_cache:.2f}")
+
+    # --- (c) cross-mode consistency --------------------------------------
+    n_c = 4096
+    ref = reference_rows(np.arange(n_c), 64, seed)
+    ctrace = [rng.integers(0, n_c, 512) for _ in range(6)]
+    cstore = FeatureStore(os.path.join(ROOT, "so_single"), n_c, 64,
+                          n_shards=4, create=True, writable=True)
+    with AsyncIOEngine(cstore) as seeder:
+        seeder.submit_write(np.arange(n_c), ref).wait()
+    outs = []
+    for w, tag in ((0, "async"), (1, "cons1"), (n_w, "cons4")):
+        if w == 0:
+            st_, eng = cstore, AsyncIOEngine(cstore)
+        else:
+            st_ = PartitionedFeatureStore(
+                os.path.join(ROOT, f"so_{tag}"), n_c, 64,
+                make_partition("hash", n_c, w), n_shards=4, create=True,
+                rng_seed=seed)
+            eng = RemoteIOEngine(st_, me=0)
+        cache = HeteroCache(st_, None, n_c // 16, n_c // 8, eng)
+        outs.append([cache.gather(ids).copy() for ids in ctrace])
+        cache.close()
+        eng.close()
+    same = all(np.array_equal(a, b) for got in outs[1:]
+               for a, b in zip(outs[0], got))
+    emit("scale_out/consistency/summary", 0.0,
+         f"modes_identical={float(same):.1f};modes=3;batches={len(ctrace)}")
+
+    # --- (d) O(k) incremental policy cost --------------------------------
+    n_small, n_large, k = 20000, 2000000, 1024
+    groups, per = 5, 20
+    cost = {}
+    for n in (n_small, n_large):
+        pol = make_policy("online", n, refresh_every=16, half_life=8)
+        pol.record(np.arange(n, dtype=np.int64))    # fault in every page:
+        bs = [rng.integers(0, n, k)                 # measure compute, not
+              for _ in range(groups * per)]         # first-touch faults
+        times = []
+        for gi in range(groups):                    # min over groups drops
+            t0 = _time.perf_counter()               # transient CI noise
+            for b in bs[gi * per:(gi + 1) * per]:
+                pol.record(b)
+                pol.refresh_due()
+            times.append((_time.perf_counter() - t0) / per)
+        cost[n] = min(times)
+    ratio, rows_ratio = cost[n_large] / cost[n_small], n_large / n_small
+    ok = ratio <= 0.2 * rows_ratio              # O(n) decay would hit ~100x
+    emit("scale_out/policy-cost/summary", cost[n_large] * 1e6,
+         f"cost_scales_ok={float(ok):.1f};cost_ratio={ratio:.2f};"
+         f"rows_ratio={rows_ratio:.0f}")
+
+    # --- (e) dead-peer reroute + fleet router ----------------------------
+    coord = Coordinator(n_workers=n_w)
+    inj = FailureInjector(kill_at={2: 1})
+    refso = reference_rows(np.arange(n_so), dim, seed)
+    victim = ps4.partition.rows_of(1)
+    with RemoteIOEngine(ps4, me=0, coordinator=coord) as eng:
+        cq, tickets, batches = CompletionQueue(), [], []
+        for step in range(6):
+            inj.apply(step, coord.workers)
+            ids = np.concatenate([rng.choice(victim, batch // 2),
+                                  rng.integers(0, n_so, batch // 2)])
+            batches.append(ids)
+            tickets.append(eng.submit(ids, cq=cq))
+        done = cq.drain()
+        exact_once = (len(done) == len(tickets)
+                      and {id(t) for t in done} == {id(t) for t in tickets})
+        correct = all(np.array_equal(tk.wait()[0], refso[ids])
+                      for tk, ids in zip(tickets, batches))
+        t_dead = eng.submit(victim[:batch]).wait()[1]
+        coord.workers[1].alive = True
+        t_live = eng.submit(victim[:batch]).wait()[1]
+        ok = exact_once and correct and eng.rerouted_rows > 0
+        emit("scale_out/fleet/deadpeer", t_dead * 1e6,
+             f"reroute_ok={float(ok):.1f};rerouted_rows={eng.rerouted_rows};"
+             f"degraded_slowdown={t_dead / t_live:.2f}")
+
+    from repro.serving import ServerConfig
+    g = synth_graph(2000, 6, skew=1.2, seed=0)
+    fstore = FeatureStore(os.path.join(ROOT, "so_fleet"), 2000, 64,
+                          n_shards=2, create=True, rng_seed=0, writable=True)
+    cfg = ServerConfig(request_batch_size=16, fanouts=(4, 3), hidden=32,
+                       device_cache_frac=0.02, host_cache_frac=0.10,
+                       presample_batches=1, seed=0)
+    n_req = 24 if SMOKE else 48
+    with ServingFleet(g, fstore, n_replicas=3, cfg=cfg, seed=1) as fleet:
+        for _ in range(n_req):
+            fleet.submit(rng.choice(2000, 16, replace=False))
+        fleet.flush()
+        wids = rng.choice(2000, 64, replace=False)
+        fleet.write_embeddings(
+            wids, rng.standard_normal((64, 64)).astype(np.float32))
+        fleet.flush()
+        counts = fleet.router.route_counts
+        emit("scale_out/fleet/router", 0.0,
+             f"routed={int(counts.sum())};"
+             f"balance={counts.max() / max(counts.min(), 1):.2f};"
+             f"invalidated_rows={fleet.invalidated_rows}")
+
+    emit("scale_out/summary", 0.0,
+         f"scale_ok={scale:.2f};x_cache_vs_remote_always={x_cache:.2f};"
+         f"modes_identical={float(same):.1f}")
+
+
 def table1_datasets():
     """Table 1 sanity: registered dataset characteristics."""
     for name, d in DATASETS.items():
@@ -524,4 +738,4 @@ def table1_datasets():
 
 ALL = [table1_datasets, fig7_iostack, fig5_end_to_end, fig6_inmem,
        fig8_cpu_cache_ssds, fig9_cpu_cache_dims, fig10_gpu_cache,
-       fig11_pipeline, serve_slo, cache_policy, io_path]
+       fig11_pipeline, serve_slo, cache_policy, io_path, scale_out]

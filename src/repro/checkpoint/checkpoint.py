@@ -205,40 +205,115 @@ class CheckpointManager:
             virt += tk.wait()[1]
         return virt
 
+    def _shard_version_fp(self, versions: np.ndarray,
+                          n_shards: int) -> dict:
+        """Per-shard fingerprint of the write-version counters: shard ``s``
+        holds rows ``s::n_shards`` (round-robin stripe), so its fingerprint
+        is the CRC of exactly those rows' versions.  Any write bumps its
+        row's version, which moves the owning shard's fingerprint."""
+        return {str(s): zlib.crc32(
+                    np.ascontiguousarray(versions[s::n_shards],
+                                         np.int64).tobytes())
+                for s in range(n_shards)}
+
+    def _stream_one_shard(self, store, eng, shard: int, n_shards: int,
+                          chunk_rows: int) -> float:
+        """Stream only shard ``shard``'s rows (``shard::n_shards``) through
+        chunked ``submit_write`` tickets — the delta path copies changed
+        shards and nothing else."""
+        from repro.core.iostack import CompletionQueue
+        virt, cq = 0.0, CompletionQueue()
+        gids = np.arange(shard, store.n_rows, n_shards)
+        for lo in range(0, len(gids), chunk_rows):
+            ids = gids[lo:lo + chunk_rows]
+            eng.submit_write(ids, store.read_rows(ids), tag="ckpt", cq=cq)
+            while cq.pending >= self._EMB_INFLIGHT:
+                virt += cq.pop().wait()[1]
+        for tk in cq.drain():
+            virt += tk.wait()[1]
+        return virt
+
     def save_embeddings(self, step: int, store, chunk_rows: int = 65536,
                         extra: dict | None = None, striped: bool = True,
-                        coalesce_gap=8) -> dict:
+                        coalesce_gap=8, versions: np.ndarray | None = None,
+                        base_step: int | None = None) -> dict:
         """Checkpoint a (flushed) embedding ``FeatureStore`` as a sharded
         table: rows stream in chunks through a striped ``submit_write``
         engine into a stage-dir FeatureStore with identical geometry, the
         manifest records per-shard CRCs, and the atomic rename publishes.
-        Call ``cache.flush()`` first so storage is authoritative."""
+        Call ``cache.flush()`` first so storage is authoritative.
+
+        INCREMENTAL/DELTA mode: pass ``versions`` (the per-row write
+        version counters, e.g. ``cache.mut._versions`` via
+        ``MutableTierTable.versions``) and only shards whose version
+        fingerprint MOVED since the base checkpoint are written; unchanged
+        shards' manifest entries point at the step that last wrote them
+        (chains flatten — a delta of a delta references the original
+        holder directly).  ``base_step`` picks the base (default: latest
+        embedding checkpoint); a base without fingerprints forces a full
+        save."""
         from repro.core.iostack import AsyncIOEngine, FeatureStore
         stage = os.path.join(self.dir, f".stage_emb_{step}")
         final = os.path.join(self.dir, f"emb_{step:010d}")
+        n_shards = store.n_shards
+        fp = (self._shard_version_fp(np.asarray(versions), n_shards)
+              if versions is not None else None)
+        base = None
+        if fp is not None:
+            if base_step is None:
+                base_step = self.latest_embedding_step()
+            if base_step is not None:
+                with open(os.path.join(self.dir, f"emb_{base_step:010d}",
+                                       "manifest.json")) as f:
+                    base = json.load(f)
+                if "version_fp" not in base:
+                    base = None         # pre-delta base: save everything
+        changed = (list(range(n_shards)) if base is None else
+                   [s for s in range(n_shards)
+                    if fp[str(s)] != base["version_fp"].get(str(s))])
         shutil.rmtree(stage, ignore_errors=True)
         os.makedirs(stage)
         dest = FeatureStore(os.path.join(stage, "table"), store.n_rows,
                             store.row_dim, dtype=store.dtype,
-                            n_shards=store.n_shards, create=True,
-                            writable=True)
+                            n_shards=n_shards, create=True, writable=True)
         with AsyncIOEngine(dest, striped=striped,
                            coalesce_gap=coalesce_gap) as eng:
-            virt = self._stream_rows(store, eng, chunk_rows)
+            if len(changed) == n_shards:
+                virt = self._stream_rows(store, eng, chunk_rows)
+            else:
+                virt = sum(self._stream_one_shard(store, eng, s, n_shards,
+                                                  chunk_rows)
+                           for s in changed)
         dest.flush()
+        del dest                        # release memmaps before unlinking
         shards = {}
-        for s in range(store.n_shards):
+        for s in range(n_shards):
             fn = f"shard_{s}.bin"
-            shards[str(s)] = {
-                "file": f"table/{fn}",
-                "crc32": self._file_crc(os.path.join(stage, "table", fn))}
+            if s in changed:
+                shards[str(s)] = {
+                    "step": step, "file": f"table/{fn}",
+                    "crc32": self._file_crc(os.path.join(stage, "table",
+                                                         fn))}
+            else:
+                # unchanged: reference the base's holder (chain-flattened —
+                # the base entry already names the step that wrote it) and
+                # drop the zero-filled local copy from the stage dir
+                ent = dict(base["shards"][str(s)])
+                ent.setdefault("step", base["step"])
+                shards[str(s)] = ent
+                os.remove(os.path.join(stage, "table", fn))
         manifest = {"step": step, "kind": "embedding",
                     "geometry": {"n_rows": store.n_rows,
                                  "row_dim": store.row_dim,
                                  "dtype": store.dtype.name,
-                                 "n_shards": store.n_shards},
+                                 "n_shards": n_shards},
                     "shards": shards, "virtual_write_s": virt,
+                    "shards_written": len(changed),
                     "extra": extra or {}, "time": time.time()}
+        if fp is not None:
+            manifest["version_fp"] = fp
+        if base is not None:
+            manifest["delta_of"] = base["step"]
         with open(os.path.join(stage, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         shutil.rmtree(final, ignore_errors=True)
@@ -246,13 +321,24 @@ class CheckpointManager:
         self._gc_embeddings()
         return manifest
 
+    def _emb_shard_path(self, ent: dict | str, manifest: dict) -> str:
+        """Resolve a shard entry to its file on disk: delta manifests point
+        unchanged shards at the STEP that last wrote them."""
+        if isinstance(ent, str):                    # legacy manifests
+            ent = {"file": ent}
+        holder = ent.get("step", manifest["step"])
+        return os.path.join(self.dir, f"emb_{holder:010d}", ent["file"])
+
     def restore_embeddings(self, store, step: int | None = None,
                            chunk_rows: int = 65536, verify: bool = True,
                            striped: bool = True, coalesce_gap=8) -> dict:
         """Stream a sharded embedding checkpoint back into the LIVE
         (writable) ``store`` through ``submit_write``; per-shard CRCs are
-        verified before a single row lands."""
-        from repro.core.iostack import AsyncIOEngine, FeatureStore
+        verified before a single row lands.  Delta manifests resolve each
+        shard to the step that actually holds its bytes (mixed base+delta
+        restore), so a chain of incremental checkpoints reconstructs the
+        full table from exactly ``n_shards`` files."""
+        from repro.core.iostack import AsyncIOEngine, CompletionQueue
         step = step if step is not None else self.latest_embedding_step()
         if step is None:
             raise FileNotFoundError("no embedding checkpoint found")
@@ -265,18 +351,31 @@ class CheckpointManager:
         if geo != want:
             raise ValueError(f"embedding checkpoint geometry {geo} != "
                              f"live store {want}")
+        paths = {int(s): self._emb_shard_path(ent, manifest)
+                 for s, ent in manifest["shards"].items()}
         if verify:
             for s, ent in manifest["shards"].items():
-                crc = self._file_crc(os.path.join(d, ent["file"]))
+                if isinstance(ent, str):
+                    ent = {"file": ent}
+                crc = self._file_crc(paths[int(s)])
                 if crc != ent["crc32"]:
                     raise IOError(f"embedding shard {s} corrupt: "
                                   f"crc {crc:#x} != {ent['crc32']:#x}")
-        src = FeatureStore(os.path.join(d, "table"), geo["n_rows"],
-                           geo["row_dim"], dtype=np.dtype(geo["dtype"]),
-                           n_shards=geo["n_shards"])
+        n_shards = geo["n_shards"]
+        virt, cq = 0.0, CompletionQueue()
         with AsyncIOEngine(store, striped=striped,
                            coalesce_gap=coalesce_gap) as eng:
-            virt = self._stream_rows(src, eng, chunk_rows)
+            for s in range(n_shards):
+                rows = np.load(paths[s], mmap_mode="r")
+                gids = np.arange(s, geo["n_rows"], n_shards)
+                for lo in range(0, len(gids), chunk_rows):
+                    eng.submit_write(gids[lo:lo + chunk_rows],
+                                     np.asarray(rows[lo:lo + chunk_rows]),
+                                     tag="ckpt", cq=cq)
+                    while cq.pending >= self._EMB_INFLIGHT:
+                        virt += cq.pop().wait()[1]
+            for tk in cq.drain():
+                virt += tk.wait()[1]
         store.flush()
         return manifest | {"restore_virtual_write_s": virt}
 
@@ -293,6 +392,21 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def _gc_embeddings(self):
-        for s in self.all_embedding_steps()[:-self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"emb_{s:010d}"),
-                          ignore_errors=True)
+        """Keep the last ``keep`` embedding checkpoints PLUS any older step
+        a surviving delta still references for shard bytes — collecting a
+        base out from under its deltas would corrupt every restore chained
+        through it."""
+        steps = self.all_embedding_steps()
+        survivors = set(steps[-self.keep:])
+        referenced = set()
+        for s in survivors:
+            mf = os.path.join(self.dir, f"emb_{s:010d}", "manifest.json")
+            with open(mf) as f:
+                manifest = json.load(f)
+            for ent in manifest["shards"].values():
+                if isinstance(ent, dict):
+                    referenced.add(ent.get("step", manifest["step"]))
+        for s in steps:
+            if s not in survivors and s not in referenced:
+                shutil.rmtree(os.path.join(self.dir, f"emb_{s:010d}"),
+                              ignore_errors=True)

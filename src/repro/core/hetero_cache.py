@@ -37,7 +37,7 @@ import numpy as np
 
 from repro.core.iostack import AsyncIOEngine, FeatureStore, keep_last_writer
 from repro.core.policy import (CachePolicy, StaticPresamplePolicy,
-                               tables_from_sets)
+                               patch_tables, tables_from_sets)
 from repro.core.simulator import (DEFAULT_ENVELOPE, HardwareEnvelope,
                                   dram_gather_time, hbm_gather_time,
                                   pcie_time)
@@ -50,9 +50,11 @@ class CacheStats:
     device_hits: int = 0
     host_hits: int = 0
     storage_misses: int = 0
+    remote_hits: int = 0                # rows resolved from a peer's store
     virtual_device_s: float = 0.0
     virtual_host_s: float = 0.0
     virtual_storage_s: float = 0.0
+    virtual_remote_s: float = 0.0
     wall_s: float = 0.0
     batches: int = 0
     # tier-migration accounting (refresh())
@@ -76,12 +78,14 @@ class CacheStats:
 
     @property
     def hit_rate(self):
-        total = self.device_hits + self.host_hits + self.storage_misses
+        total = (self.device_hits + self.host_hits + self.storage_misses
+                 + self.remote_hits)
         return (self.device_hits + self.host_hits) / total if total else 0.0
 
     def virtual_batch_time(self, pipelined: bool) -> float:
         """Per-call data-path time: tiers overlap when pipelined."""
-        ts = (self.virtual_device_s, self.virtual_host_s, self.virtual_storage_s)
+        ts = (self.virtual_device_s, self.virtual_host_s,
+              self.virtual_storage_s, self.virtual_remote_s)
         return max(ts) if pipelined else sum(ts)
 
 
@@ -191,22 +195,24 @@ class PendingGather:
     gather stays internally consistent no matter when migration lands.
     """
 
-    __slots__ = ("ids", "plan", "out", "ticket", "device_tier", "host_tier",
-                 "t0", "done", "storage_virt", "wc_patch", "_looked",
-                 "_dev_rows", "_lk")
+    __slots__ = ("ids", "plan", "out", "ticket", "rticket", "device_tier",
+                 "host_tier", "t0", "done", "storage_virt", "remote_virt",
+                 "wc_patch", "_looked", "_dev_rows", "_lk")
 
     def __init__(self, ids, plan, out, ticket, device_tier, host_tier,
-                 wc_patch=None):
+                 wc_patch=None, rticket=None):
         self.ids = ids
         self.plan = plan
         self.out = out
         self.ticket = ticket
+        self.rticket = rticket          # remote-tier ticket (peer gather)
         self.device_tier = device_tier
         self.host_tier = host_tier
         self.wc_patch = wc_patch        # (dests, rows) write-combiner overlay
         self.t0 = time.perf_counter()
         self.done = False
         self.storage_virt = 0.0         # virtual s the ticket resolved with
+        self.remote_virt = 0.0          # virtual s the remote leg resolved with
         self._looked = False
         self._dev_rows = None
         self._lk = threading.Lock()
@@ -222,6 +228,16 @@ class PendingGather:
     @property
     def n_storage(self) -> int:
         return len(self.plan[2][0])
+
+    @property
+    def n_remote(self) -> int:
+        return len(self.plan[3][0])
+
+    @property
+    def io_virt(self) -> float:
+        """Operator cost of the miss path: the storage and remote legs run
+        on parallel engine queues, so the pipeline charges the slower."""
+        return max(self.storage_virt, self.remote_virt)
 
 
 def tier_rows(mode: str, n_vertices: int, device_frac: float,
@@ -254,7 +270,8 @@ class HeteroCache:
                  env: HardwareEnvelope = DEFAULT_ENVELOPE,
                  policy: CachePolicy | None = None,
                  write_policy: str = "writeback",
-                 write_combine_rows: int = 0):
+                 write_combine_rows: int = 0,
+                 remote_mask: np.ndarray | None = None):
         if write_policy not in ("writeback", "writethrough"):
             raise ValueError(f"unknown write_policy {write_policy!r} "
                              "(expected writeback | writethrough)")
@@ -284,6 +301,20 @@ class HeteroCache:
         self._wr_lock = threading.Lock()
         self._owns_engine = io_engine is None
         self.io = io_engine or AsyncIOEngine(store, env=env)
+        # fourth tier: rows whose un-cached home is a PEER's store (loc 3).
+        # Derived from the engine's partition map when the cache sits on a
+        # RemoteIOEngine (rows this worker doesn't own are remote), or
+        # passed explicitly; single-node caches have no remote rows and
+        # keep the 3-tier behavior bit-for-bit.
+        if remote_mask is None and hasattr(self.io, "me") \
+                and hasattr(store, "owner"):
+            remote_mask = np.asarray(store.owner) != self.io.me
+        self._base_loc = np.full(store.n_rows, 2, np.int8)
+        if remote_mask is not None:
+            remote_mask = np.asarray(remote_mask, bool)
+            if len(remote_mask) != store.n_rows:
+                raise ValueError("remote_mask length != store.n_rows")
+            self._base_loc[remote_mask] = 3
         if policy is None:
             policy = StaticPresamplePolicy(
                 np.zeros(store.n_rows) if hotness is None else hotness)
@@ -299,7 +330,8 @@ class HeteroCache:
         self._host_ids = order[self.device_rows:
                                self.device_rows + self.host_rows]
         self.loc, self.slot = tables_from_sets(store.n_rows, self._dev_ids,
-                                               self._host_ids)
+                                               self._host_ids,
+                                               base_loc=self._base_loc)
         # device tier: jnp array (HBM); host tier: pinned numpy
         import jax.numpy as jnp
         self.device_tier = (jnp.asarray(store.read_rows(self._dev_ids))
@@ -318,7 +350,8 @@ class HeteroCache:
     # split-phase gather: the ONE tier-plan/gather/stats code path
     # ------------------------------------------------------------------
     def plan(self, ids: np.ndarray, loc=None, slot=None):
-        """Split a request batch by tier -> (dev, host, disk) x (slot, dest)."""
+        """Split a request batch by tier ->
+        (dev, host, disk, remote) x (slot, dest)."""
         loc = self.loc if loc is None else loc
         slot = self.slot if slot is None else slot
         where = loc[ids]
@@ -327,7 +360,9 @@ class HeteroCache:
         d = where == 0
         h = where == 1
         m = where == 2
-        return ((slots[d], dest[d]), (slots[h], dest[h]), (ids[m], dest[m]))
+        r = where == 3
+        return ((slots[d], dest[d]), (slots[h], dest[h]),
+                (ids[m], dest[m]), (ids[r], dest[r]))
 
     def submit_planned(self, ids: np.ndarray,
                        n_rows: int | None = None) -> PendingGather:
@@ -341,25 +376,38 @@ class HeteroCache:
         n_out = len(ids) if n_rows is None else n_rows
         out = np.zeros((n_out, self.store.row_dim), self.store.dtype)
         sids, sdest = plan[2]
+        rids, rdest = plan[3]
         # write-combiner overlay, captured at SUBMIT time: a buffered row
         # is fresher than storage.  The lookup and the storage submit sit
         # under ONE lock shared with the combiner's take->submit_write, so
         # either the entry is still buffered (overlay patches it) or the
         # combined write was queued before this read on its shard and
-        # per-shard FIFO makes the read observe it
+        # per-shard FIFO makes the read observe it.  The remote leg goes
+        # out FIRST — it has the longest latency (paper's overlap order),
+        # and its rows share the overlay (a combined row is fresher than
+        # the owner's store too)
         wc_patch = None
-        if self._wc is not None and len(sids):
+        rticket = ticket = None
+        if self._wc is not None and (len(sids) or len(rids)):
             with self._wc_io_lock:
                 if len(self._wc):
-                    hit = self._wc.lookup(sids)
+                    mids = np.concatenate([rids, sids])
+                    mdest = np.concatenate([rdest, sdest])
+                    hit = self._wc.lookup(mids)
                     if hit is not None:
                         mask, rows = hit
-                        wc_patch = (sdest[mask], rows)
-                ticket = self.io.submit(sids, out, sdest)
+                        wc_patch = (mdest[mask], rows)
+                if len(rids):
+                    rticket = self.io.submit(rids, out, rdest, tag="remote")
+                if len(sids):
+                    ticket = self.io.submit(sids, out, sdest)
         else:
-            ticket = self.io.submit(sids, out, sdest) if len(sids) else None
+            if len(rids):
+                rticket = self.io.submit(rids, out, rdest, tag="remote")
+            if len(sids):
+                ticket = self.io.submit(sids, out, sdest)
         return PendingGather(ids, plan, out, ticket, device_tier, host_tier,
-                             wc_patch)
+                             wc_patch, rticket=rticket)
 
     def lookup_planned(self, pg: PendingGather) -> None:
         """Phase 2: host-tier gather into the buffer + device-tier gather
@@ -368,7 +416,7 @@ class HeteroCache:
         with pg._lk:
             if pg._looked:
                 return
-            (dslot, _), (hslot, hdest), _ = pg.plan
+            (dslot, _), (hslot, hdest) = pg.plan[0], pg.plan[1]
             if len(hslot):
                 pg.out[hdest] = pg.host_tier[hslot]
             if len(dslot):
@@ -380,7 +428,9 @@ class HeteroCache:
         """Phase 3: wait out the storage ticket, land the device rows,
         account stats ONCE, and feed the access stream to the policy."""
         self.lookup_planned(pg)
-        virt_sto = 0.0
+        virt_sto = virt_rem = 0.0
+        if pg.rticket is not None:
+            _, virt_rem = pg.rticket.wait()
         if pg.ticket is not None:
             _, virt_sto = pg.ticket.wait()
         with pg._lk:
@@ -394,25 +444,29 @@ class HeteroCache:
                 dests, rows = pg.wc_patch
                 pg.out[dests] = rows
             pg.storage_virt = virt_sto
+            pg.remote_virt = virt_rem
             pg.done = True
 
         rb = self.store.row_bytes
-        n_dev, n_host, n_sto = pg.n_device, pg.n_host, pg.n_storage
+        n_dev, n_host = pg.n_device, pg.n_host
+        n_sto, n_rem = pg.n_storage, pg.n_remote
         with self._stats_lock:
             st = self.stats
             st.device_hits += n_dev
             st.host_hits += n_host
             st.storage_misses += n_sto
+            st.remote_hits += n_rem
             st.virtual_device_s += hbm_gather_time(n_dev * rb, self.env)
             st.virtual_host_s += (dram_gather_time(n_host * rb, self.env)
                                   + pcie_time(n_host * rb, self.env))
-            # the virtual seconds the ticket actually resolved with — NOT a
-            # recompute of ArrayModel.read_time at full queue depth — so
+            # the virtual seconds the tickets actually resolved with — NOT
+            # a recompute of ArrayModel.read_time at full queue depth — so
             # cache stats agree with engine stats in every mode: the async
             # engine's striped/coalesced time, the sync engine's collapsed
             # queue depth, and the CPU engine's staging overhead all land
-            # here unchanged
+            # here unchanged; the remote leg books its own tier
             st.virtual_storage_s += virt_sto
+            st.virtual_remote_s += virt_rem
             st.wall_s += time.perf_counter() - pg.t0
             st.batches += 1
         self.policy.record(pg.ids)
@@ -461,7 +515,10 @@ class HeteroCache:
             return res if wait else PendingWrite(res, None)
         with self._refresh_lock:
             lc = self.loc[ids]
-            d, h, m = lc == 0, lc == 1, lc == 2
+            # m = un-cached rows: local storage (2) AND remote-owned (3).
+            # Remote rows write through the engine, which stripes by owner
+            # — owner-writes: the one durable copy lives at the owner
+            d, h, m = lc == 0, lc == 1, lc >= 2
             if h.any():
                 # copy-on-write, same snapshot discipline as refresh(): an
                 # in-flight gather pinned the OLD array, so scattering into
@@ -557,7 +614,7 @@ class HeteroCache:
         with self._refresh_lock:                # RLock: write_planned re-enters
             cur = np.empty((len(uniq), self.store.row_dim), self.store.dtype)
             lc, sl = self.loc[uniq], self.slot[uniq]
-            h, d, m = lc == 1, lc == 0, lc == 2
+            h, d, m = lc == 1, lc == 0, lc >= 2
             if h.any():
                 cur[h] = self.host_tier[sl[h]]
             if d.any():
@@ -848,7 +905,8 @@ class HeteroCache:
                     host_tier = host_tier.copy()
                     host_tier[host_free] = host_buf
                 loc, slot = tables_from_sets(self.store.n_rows, new_dev_ids,
-                                             new_host_ids)
+                                             new_host_ids,
+                                             base_loc=self._base_loc)
 
                 # tier-to-tier copies cross PCIe; storage admissions cost
                 # what their ticket actually resolved with (ticket-resolved
@@ -934,7 +992,7 @@ class HeteroCache:
         happens in ``complete_prefetch``."""
         with self._refresh_lock:
             ids = np.asarray(ids)
-            ids = ids[self.loc[ids] == 2]           # storage-resident only
+            ids = ids[self.loc[ids] >= 2]           # storage/remote-resident
             if self.mut is not None and len(ids):
                 # demoted-dirty rows (write-combined or mid-flush) await a
                 # write-back: a storage prefetch racing that write could
@@ -986,7 +1044,7 @@ class HeteroCache:
         _, virt = pp.ticket.wait()
         with self._refresh_lock:
             cur = self._host_ids if pp.tier == "host" else self._dev_ids
-            ok = (self.loc[pp.ids] == 2) & (cur[pp.victims] == pp.victim_ids)
+            ok = (self.loc[pp.ids] >= 2) & (cur[pp.victims] == pp.victim_ids)
             if pp.versions is not None:
                 # a write_planned that landed mid-flight (write-through on a
                 # storage row bumps its version) makes the prefetched buffer
@@ -1000,14 +1058,24 @@ class HeteroCache:
                 # flush-on-demote: evicted victims may hold dirty values
                 _, flush_virt = self._flush_demoted(cur[victims])
                 # copy-on-prefetch, same snapshot discipline as refresh():
-                # new tables/tier arrays built aside, swapped atomically
+                # new tables/tier arrays built aside, swapped atomically.
+                # O(k) table patch: admitted rows point at their new slots,
+                # evicted victims fall back to their base tier (local
+                # storage or remote peer) addressed by row id — no full
+                # rebuild from the tier membership lists
+                evicted = cur[victims]
                 new_ids = cur.copy()
                 new_ids[victims] = ids
+                tier_code = 1 if pp.tier == "host" else 0
+                loc, slot = patch_tables(
+                    self.loc, self.slot,
+                    np.concatenate([evicted, ids]),
+                    np.concatenate([self._base_loc[evicted],
+                                    np.full(k, tier_code, np.int8)]),
+                    np.concatenate([evicted, victims]))
                 if pp.tier == "host":
                     tier_arr = self.host_tier.copy()
                     tier_arr[victims] = buf
-                    loc, slot = tables_from_sets(self.store.n_rows,
-                                                 self._dev_ids, new_ids)
                     with self._table_lock:
                         self.loc, self.slot = loc, slot
                         self.host_tier = tier_arr
@@ -1015,8 +1083,6 @@ class HeteroCache:
                 else:
                     tier_arr = self.device_tier.at[jnp.asarray(victims)].set(
                         jnp.asarray(buf))
-                    loc, slot = tables_from_sets(self.store.n_rows, new_ids,
-                                                 self._host_ids)
                     with self._table_lock:
                         self.loc, self.slot = loc, slot
                         self.device_tier = tier_arr
@@ -1035,6 +1101,37 @@ class HeteroCache:
             # them for the operator's virtual cost instead of returning
             # None and charging the pipeline nothing
             return PrefetchResult(k, pp.tier, virt + flush_virt)
+
+    # ------------------------------------------------------------------
+    # cross-replica coherence: refresh stale cached copies in place
+    # ------------------------------------------------------------------
+    def invalidate_rows(self, ids: np.ndarray) -> tuple:
+        """Refresh this cache's RESIDENT copies of ``ids`` from the backing
+        store — another replica (the rows' owner) rewrote them, so any
+        tier copy held here is stale.  Fresh values land through the same
+        copy-on-write/atomic-swap discipline as writes; non-resident ids
+        cost nothing (their next gather reads current storage anyway).
+        Returns ``(rows_refreshed, virtual_s)`` of the re-read ticket."""
+        import jax.numpy as jnp
+        with self._refresh_lock:
+            ids = np.unique(np.asarray(ids))
+            res = ids[self.loc[ids] < 2]
+            if not len(res):
+                return 0, 0.0
+            buf = np.empty((len(res), self.store.row_dim), self.store.dtype)
+            _, virt = self.io.submit(res, buf, tag="invalidate").wait()
+            lc, sl = self.loc[res], self.slot[res]
+            h, d = lc == 1, lc == 0
+            if h.any():
+                host_tier = self.host_tier.copy()
+                host_tier[sl[h]] = buf[h]
+                with self._table_lock:
+                    self.host_tier = host_tier
+            if d.any():
+                with self._table_lock:
+                    self.device_tier = self.device_tier.at[
+                        jnp.asarray(sl[d])].set(jnp.asarray(buf[d]))
+            return len(res), virt
 
     # ------------------------------------------------------------------
     def close(self):

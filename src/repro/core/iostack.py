@@ -68,6 +68,8 @@ class FeatureStore:
         self.dtype = np.dtype(dtype)
         self.row_bytes = self.row_dim * self.dtype.itemsize
         self.writable = writable
+        self.path = path        # sibling stores (optimizer state) derive
+                                # their location from the feature store's
         os.makedirs(path, exist_ok=True)
         # layout marker: stores written under the old contiguous range
         # partitioning would otherwise reopen and silently permute rows

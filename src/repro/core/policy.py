@@ -34,28 +34,49 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 
-def placement(hotness: np.ndarray, device_rows: int, host_rows: int):
+def placement(hotness: np.ndarray, device_rows: int, host_rows: int,
+              base_loc: np.ndarray | None = None):
     """Rank-by-hotness placement: returns (loc, slot) arrays.
 
-    loc[i]  in {0: device, 1: host, 2: storage}
-    slot[i] = index within its tier (storage is addressed by row id).
+    loc[i]  in {0: device, 1: host, 2: storage, 3: remote peer}
+    slot[i] = index within its tier (storage/remote addressed by row id).
     """
     order = np.argsort(-np.asarray(hotness), kind="stable")
     return tables_from_sets(len(hotness), order[:device_rows],
-                            order[device_rows:device_rows + host_rows])
+                            order[device_rows:device_rows + host_rows],
+                            base_loc=base_loc)
 
 
 def tables_from_sets(n_rows: int, dev_ids: np.ndarray,
-                     host_ids: np.ndarray):
+                     host_ids: np.ndarray,
+                     base_loc: np.ndarray | None = None):
     """(loc, slot) translation tables for explicit tier membership, where
-    ``dev_ids[s]`` / ``host_ids[s]`` is the row held in tier slot ``s``."""
-    loc = np.full(n_rows, 2, np.int8)
+    ``dev_ids[s]`` / ``host_ids[s]`` is the row held in tier slot ``s``.
+    ``base_loc`` gives the un-cached tier of every row (2 = local storage;
+    3 = remote peer under scale-out); default all-storage."""
+    loc = (np.full(n_rows, 2, np.int8) if base_loc is None
+           else np.asarray(base_loc, np.int8).copy())
     slot = np.arange(n_rows, dtype=np.int64)   # storage: slot == row id
     loc[dev_ids] = 0
     slot[dev_ids] = np.arange(len(dev_ids))
     loc[host_ids] = 1
     slot[host_ids] = np.arange(len(host_ids))
     return loc, slot
+
+
+def patch_tables(loc: np.ndarray, slot: np.ndarray, ids: np.ndarray,
+                 new_loc: np.ndarray, new_slot: np.ndarray):
+    """O(k)-scatter copy-on-write patch of the (loc, slot) tables.
+
+    The swap primitive for promotions/demotions touching ``k`` rows: the
+    tables are memcpy'd (in-flight gathers keep their snapshot) and only
+    the ``k`` changed entries are rewritten, instead of rebuilding both
+    tables from the full tier membership lists the way
+    ``tables_from_sets`` does."""
+    loc2, slot2 = loc.copy(), slot.copy()
+    loc2[ids] = new_loc
+    slot2[ids] = new_slot
+    return loc2, slot2
 
 
 @runtime_checkable
@@ -134,6 +155,15 @@ class OnlineDecayPolicy:
     time: a challenger must beat an incumbent by that margin before the
     cache migrates, which stops near-tie rows from thrashing between
     tiers.  A refresh is only proposed every ``refresh_every`` batches.
+
+    Every per-batch operation is O(k) in the rows TOUCHED, never O(n_rows):
+    decay is lazy (scores carry a per-row timestamp and pay their deferred
+    decay on next touch, so recording a batch multiplies k entries instead
+    of the whole array), and the prefetch trend tracks only the rows
+    recorded since the last check — an untouched row can only decay, so it
+    can never have a rising trend and needs no inspection.  Only
+    ``placement_scores`` — the refresh-cadence call that must rank ALL
+    rows — materialises a dense array.
     """
 
     name = "online"
@@ -143,27 +173,49 @@ class OnlineDecayPolicy:
                  hysteresis: float = 0.1, write_bias: float = 0.25):
         if refresh_every < 1:
             raise ValueError("refresh_every must be >= 1")
-        self._scores = (np.zeros(n_rows, np.float64) if init_scores is None
-                        else np.asarray(init_scores, np.float64).copy())
-        if len(self._scores) != n_rows:
+        self._w = (np.zeros(n_rows, np.float64) if init_scores is None
+                   else np.asarray(init_scores, np.float64).copy())
+        if len(self._w) != n_rows:
             raise ValueError("init_scores length != n_rows")
+        self.n_rows = n_rows
         self.decay = 0.5 ** (1.0 / half_life)
         self.refresh_every = refresh_every
         self.hysteresis = hysteresis
         self.write_bias = write_bias
         self._since_refresh = 0
-        # score snapshot at the last prefetch check: the delta against it is
-        # the score TREND that predicts rows turning hot
-        self._trend_ref = self._scores.copy()
+        self._t = 0                     # recorded-batch counter (time base)
+        self._ts = np.zeros(n_rows, np.int64)   # per-row last-touch time
+        # prefetch trend state: per-row score value/time at its last trend
+        # check, plus the set of rows touched since — delta against the
+        # check-time score is the TREND that predicts rows turning hot
+        self._trend_val = self._w.copy()
+        self._trend_t = np.zeros(n_rows, np.int64)
+        self._check_t = 0               # time of the last prefetch check
+        self._touched_mask = np.zeros(n_rows, bool)
+        self._touched: list = []
         self._lock = threading.Lock()
 
+    def _score_at(self, ids: np.ndarray, t: int) -> np.ndarray:
+        """Lazily-decayed scores of ``ids`` evaluated at time ``t``."""
+        return self._w[ids] * self.decay ** (t - self._ts[ids])
+
     def initial_scores(self) -> np.ndarray:
-        return self._scores.copy()
+        return self._w * self.decay ** (self._t - self._ts)
 
     def record(self, ids: np.ndarray) -> None:
+        ids = np.asarray(ids)
         with self._lock:
-            self._scores *= self.decay
-            np.add.at(self._scores, np.asarray(ids), 1.0)
+            self._t += 1
+            # settle each touched row's deferred decay, then count the
+            # accesses: O(k), the untouched tail decays implicitly
+            self._w[ids] = self._score_at(ids, self._t)
+            self._ts[ids] = self._t
+            np.add.at(self._w, ids, 1.0)
+            fresh = ids[~self._touched_mask[ids]]
+            if len(fresh):
+                fresh = np.unique(fresh)
+                self._touched_mask[fresh] = True
+                self._touched.append(fresh)
             self._since_refresh += 1
 
     def refresh_due(self) -> bool:
@@ -172,7 +224,8 @@ class OnlineDecayPolicy:
     def placement_scores(self, loc: np.ndarray | None = None,
                          dirty: np.ndarray | None = None) -> np.ndarray:
         with self._lock:
-            s = self._scores.copy()
+            # dense materialisation — refresh cadence only, never per batch
+            s = self._w * self.decay ** (self._t - self._ts)
         if loc is not None and self.hysteresis:
             s[loc < 2] *= 1.0 + self.hysteresis
         if dirty is not None and self.write_bias:
@@ -187,19 +240,37 @@ class OnlineDecayPolicy:
             self._since_refresh = 0
 
     def prefetch_candidates(self, loc: np.ndarray, k: int) -> np.ndarray:
-        """Storage-resident rows whose decayed-count score ROSE since the
-        last prefetch check, hottest trend first.  A rising EWMA flags a row
-        turning hot while its absolute score is still below the cached
-        incumbents — prefetching it hides the cold misses it would take to
-        climb the ranking by itself (untouched rows only decay, so they
-        never qualify)."""
+        """Storage/remote-resident rows whose decayed-count score ROSE
+        since the last prefetch check, hottest trend first.  A rising EWMA
+        flags a row turning hot while its absolute score is still below the
+        cached incumbents — prefetching it hides the cold misses it would
+        take to climb the ranking by itself.  Untouched rows only decay and
+        never qualify, so only the touched set is inspected: O(k log k) in
+        the rows recorded since the last check, independent of n_rows."""
         with self._lock:
-            delta = self._scores - self._trend_ref
-            self._trend_ref = self._scores.copy()
-        cand = np.where((delta > 0) & (loc == 2))[0]
-        if not len(cand):
-            return cand
-        return cand[np.argsort(-delta[cand], kind="stable")[:k]]
+            if not self._touched:
+                self._check_t = self._t     # refs still decay to this check
+                return np.empty(0, np.int64)
+            cand = np.unique(np.concatenate(self._touched))
+            self._touched_mask[cand] = False
+            self._touched = []
+            # both sides of the delta evaluate against the PREVIOUS check:
+            # the stored trend value decays forward to that check time,
+            # reproducing exactly the dense-snapshot delta the O(n_rows)
+            # implementation computed
+            ref = (self._trend_val[cand]
+                   * self.decay ** (self._check_t - self._trend_t[cand]))
+            cur = self._score_at(cand, self._t)
+            delta = cur - ref
+            self._trend_val[cand] = cur
+            self._trend_t[cand] = self._t
+            self._check_t = self._t
+        m = (delta > 0) & (loc[cand] >= 2)
+        cand, delta = cand[m], delta[m]
+        if len(cand) > k:
+            top = np.argpartition(-delta, k - 1)[:k]
+            cand, delta = cand[top], delta[top]
+        return cand[np.argsort(-delta, kind="stable")]
 
 
 class OracleOfflinePolicy:
@@ -252,7 +323,7 @@ class OracleOfflinePolicy:
         ``window`` batches will touch, hottest first — the upper bound no
         trend heuristic can beat."""
         counts = self._window_counts(self._cursor)
-        cand = np.where((counts > 0) & (loc == 2))[0]
+        cand = np.where((counts > 0) & (loc >= 2))[0]
         if not len(cand):
             return cand
         return cand[np.argsort(-counts[cand], kind="stable")[:k]]
@@ -335,7 +406,7 @@ class BeladyOraclePolicy:
         """Storage rows with a finite next use, soonest first."""
         with self._lock:
             nxt = self._next_use()
-        cand = np.where(np.isfinite(nxt) & (loc == 2))[0]
+        cand = np.where(np.isfinite(nxt) & (loc >= 2))[0]
         if not len(cand):
             return cand
         return cand[np.argsort(nxt[cand], kind="stable")[:k]]

@@ -149,6 +149,52 @@ class ArrayModel:
         return min(per_ssd * self.n_ssds, self.env.pcie_bw)
 
 
+@dataclass(frozen=True)
+class NetworkEnvelope:
+    """Simulated datacenter fabric between workers (100GbE-class RoCE)."""
+    latency: float = 15e-6             # seconds, one-way message latency
+    bandwidth: float = 11.0e9          # bytes/s effective per-link payload
+    msg_overhead: float = 1.2e-6       # seconds per message (framing/doorbell)
+    max_inflight: int = 64             # messages pipelined per link
+
+
+DEFAULT_NETWORK = NetworkEnvelope()
+
+
+@dataclass
+class NetworkModel:
+    """Latency/bandwidth/message-overhead model for one peer link.
+
+    Sibling of ``SSDModel``: the remote tier prices a gather as one
+    round-trip plus per-message command overhead plus the payload streamed
+    at link bandwidth.  Messages pipeline up to ``max_inflight`` so a batch
+    pays the wire latency once, not per message — the same Little's-law
+    shape as the NVMe queue-depth fraction.
+    """
+    net: NetworkEnvelope = field(default_factory=lambda: DEFAULT_NETWORK)
+
+    def xfer_time(self, n_messages: int, total_bytes: int) -> float:
+        """Virtual seconds to move ``total_bytes`` split over
+        ``n_messages`` request/response messages across the link."""
+        if n_messages == 0:
+            return 0.0
+        pipeline_frac = min(1.0, self.net.max_inflight / max(n_messages, 1))
+        lat = self.net.latency * (2.0 - pipeline_frac)  # rtt amortised
+        t_msg = n_messages * self.net.msg_overhead
+        t_stream = total_bytes / self.net.bandwidth
+        return lat + t_msg + t_stream
+
+    def gather_time(self, n_rows: int, row_bytes: int,
+                    n_peers: int = 1) -> float:
+        """Virtual seconds for a batched remote gather of ``n_rows`` rows
+        fanned out over ``n_peers`` links in parallel (bounded by the
+        slowest peer; rows assumed evenly spread)."""
+        if n_rows == 0 or n_peers <= 0:
+            return 0.0
+        per = math.ceil(n_rows / n_peers)
+        return self.xfer_time(per, per * row_bytes)
+
+
 def pcie_time(nbytes: float, env: HardwareEnvelope = DEFAULT_ENVELOPE) -> float:
     return nbytes / env.pcie_bw
 

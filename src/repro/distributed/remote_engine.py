@@ -1,0 +1,298 @@
+"""Split-phase IO engine over a partitioned fleet's feature stores.
+
+``RemoteIOEngine`` implements the SAME ``submit``/``submit_write``/ticket/
+``CompletionQueue`` API as ``AsyncIOEngine``, so a remote peer is just one
+more tier in the existing split-phase hierarchy instead of a separate RPC
+path.  A request batch is striped by row OWNER — one SQE batch per peer,
+exactly how ``AsyncIOEngine`` stripes by storage shard — and each peer's
+batches are serviced FIFO by a bounded worker pool, so peers progress in
+parallel and a read submitted after an in-flight write to the same peer
+observes that write.
+
+Timing per peer batch (virtual seconds, deterministic):
+
+  * ``me``        — local array read/write, no network.
+  * alive peer    — peer-side storage time (the owner still reads its own
+                    SSDs) + ``NetworkModel`` transfer (round-trip latency,
+                    per-message overhead, payload at link bandwidth).
+  * dead peer     — degraded reroute: the owner's storage is reached
+                    directly over the fabric at a collapsed queue depth
+                    (no owner-side submission threads to keep the array
+                    busy).  In-flight tickets still complete exactly once;
+                    the reroute is visible only in stats and timing.
+
+Dead-peer detection rides ``ft.failures.Coordinator`` (alive flags driven
+by heartbeats or a ``FailureInjector`` schedule).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.core.iostack import (CompletionQueue, IOStats, IOTicket,
+                                _ShardedCompletion, keep_last_writer)
+from repro.core.simulator import (ArrayModel, DEFAULT_ENVELOPE,
+                                  HardwareEnvelope, NetworkModel)
+from repro.distributed.partition import PartitionedFeatureStore
+
+# queue depth a dead peer's storage sustains without its owner's
+# submission threads (fabric-attached direct access, no batching help)
+DEGRADED_QD = 64
+
+
+class RemoteIOEngine:
+    """Peer-striped split-phase engine over a ``PartitionedFeatureStore``."""
+
+    def __init__(self, pstore: PartitionedFeatureStore, me: int = 0,
+                 worker_budget: float = 0.3, total_workers: int = 8,
+                 env: HardwareEnvelope = DEFAULT_ENVELOPE,
+                 net: NetworkModel | None = None, coordinator=None):
+        if not 0 <= me < pstore.n_workers:
+            raise ValueError(f"me={me} outside fleet of {pstore.n_workers}")
+        self.store = pstore
+        self.me = me
+        self.env = env
+        self.net = net if net is not None else NetworkModel()
+        self.coordinator = coordinator
+        self.worker_budget = worker_budget
+        self.n_workers = max(1, int(round(worker_budget * total_workers)))
+        self._models = [ArrayModel(st.n_shards, env) for st in pstore.stores]
+        self.stats = IOStats()
+        # scale-out accounting beyond the shared IOStats fields
+        self.local_rows = 0
+        self.remote_rows = 0
+        self.rerouted_rows = 0
+        self.rerouted_batches = 0
+        self.virtual_net_s = 0.0
+        self._lock = threading.Lock()
+        n_peers = pstore.n_workers
+        self._sqs = [queue.Queue() for _ in range(n_peers)]
+        self._cqs = [queue.Queue() for _ in range(n_peers)]
+        self._peer_lk = [threading.Lock() for _ in range(n_peers)]
+        self._ready: queue.Queue = queue.Queue()
+        self._stop = False
+        self._threads = [threading.Thread(target=self._worker, daemon=True)
+                         for _ in range(self.n_workers)]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------------
+    def peer_alive(self, w: int) -> bool:
+        if w == self.me or self.coordinator is None:
+            return True
+        ws = self.coordinator.workers.get(w)
+        return ws is None or ws.alive
+
+    def _qd(self, peer: int) -> int:
+        return int(256 * self.store.stores[peer].n_shards
+                   * min(1.0, self.worker_budget / 0.3))
+
+    # -- submission ------------------------------------------------------
+    def submit(self, ids: np.ndarray, out: np.ndarray | None = None,
+               dest: np.ndarray | None = None, tag: str = "",
+               cq: CompletionQueue | None = None) -> IOTicket:
+        fut: Future = Future()
+        t0 = time.perf_counter()
+        ids = np.asarray(ids)
+        nbytes = len(ids) * self.store.row_bytes
+        buf = out
+        if buf is None:
+            buf = np.empty((len(ids), self.store.row_dim), self.store.dtype)
+        dest_idx = (np.asarray(dest) if dest is not None
+                    else np.arange(len(ids)))
+        own, loc = self.store.to_local(ids)
+        comp = _ShardedCompletion(self, fut, buf if out is None else None, 0)
+        batches = []
+        for w in range(self.store.n_workers):
+            m = own == w
+            if m.any():
+                batches.append((w, loc[m], dest_idx[m]))
+        tk = IOTicket(fut, len(ids), nbytes, 0.0, tag, shards=len(batches))
+        if not batches:                 # empty request: resolve immediately
+            fut.set_result((buf if out is None else None, 0.0))
+        else:
+            comp.pending = len(batches)
+            for w, offs, d in batches:
+                self._sqs[w].put(("r", offs, (d, buf), comp))
+                self._ready.put(w)
+        tk.submit_wall = time.perf_counter() - t0
+        with self._lock:
+            self.stats.requests += len(ids)
+            self.stats.bytes += nbytes
+            self.stats.wall_submit_s += tk.submit_wall
+            self.stats.batches += 1
+            self.stats.shard_batches += len(batches)
+        if cq is not None:
+            cq.add(tk)
+        return tk
+
+    def submit_write(self, ids: np.ndarray, rows: np.ndarray, tag: str = "",
+                     cq: CompletionQueue | None = None) -> IOTicket:
+        """Owner-writes: the batch stripes by row owner and each slice
+        lands in the OWNER's store (over the network for peers), so there
+        is exactly one durable copy of every row fleet-wide."""
+        if not self.store.writable:
+            raise PermissionError("submit_write on a read-only store; "
+                                  "open it with writable=True")
+        fut: Future = Future()
+        t0 = time.perf_counter()
+        ids = np.asarray(ids)
+        rows = np.asarray(rows, self.store.dtype)
+        if rows.shape != (len(ids), self.store.row_dim):
+            raise ValueError(f"rows shape {rows.shape} != "
+                             f"({len(ids)}, {self.store.row_dim})")
+        ids, rows = keep_last_writer(ids, rows)
+        nbytes = len(ids) * self.store.row_bytes
+        own, loc = self.store.to_local(ids)
+        comp = _ShardedCompletion(self, fut, None, 0, kind="w")
+        batches = []
+        for w in range(self.store.n_workers):
+            m = own == w
+            if m.any():
+                batches.append((w, loc[m], rows[m]))
+        tk = IOTicket(fut, len(ids), nbytes, 0.0, tag, shards=len(batches))
+        if not batches:
+            fut.set_result((None, 0.0))
+        else:
+            comp.pending = len(batches)
+            for w, offs, data in batches:
+                self._sqs[w].put(("w", offs, data, comp))
+                self._ready.put(w)
+        tk.submit_wall = time.perf_counter() - t0
+        with self._lock:
+            self.stats.write_requests += len(ids)
+            self.stats.write_bytes += nbytes
+            self.stats.wall_submit_s += tk.submit_wall
+            self.stats.write_batches += 1
+            self.stats.write_shard_batches += len(batches)
+        if cq is not None:
+            cq.add(tk)
+        return tk
+
+    # -- per-peer service ------------------------------------------------
+    def _service_peer(self, w: int, offs: np.ndarray, dest: np.ndarray,
+                      buf: np.ndarray):
+        st = self.store.stores[w]
+        n = len(offs)
+        span_bytes = n * self.store.row_bytes
+        buf[dest] = st.read_rows(offs)
+        alive = self.peer_alive(w)
+        if w == self.me:
+            virt, net_s, kind = (
+                self._models[w].read_time(n, st.row_bytes, self._qd(w)),
+                0.0, "local")
+        elif alive:
+            t_peer = self._models[w].read_time(n, st.row_bytes, self._qd(w))
+            net_s = self.net.xfer_time(n, span_bytes)
+            virt, kind = t_peer + net_s, "remote"
+        else:
+            # dead peer: reach its storage directly over the fabric — the
+            # array runs at a collapsed queue depth without the owner's
+            # submission threads, and every row still crosses the network
+            t_deg = self._models[w].read_time(n, st.row_bytes, DEGRADED_QD)
+            net_s = self.net.xfer_time(n, span_bytes)
+            virt, kind = t_deg + net_s, "reroute"
+        return virt, net_s, span_bytes, kind, n
+
+    def _service_peer_write(self, w: int, offs: np.ndarray,
+                            rows: np.ndarray):
+        st = self.store.stores[w]
+        n = len(offs)
+        span_bytes = n * self.store.row_bytes
+        st.write_rows(offs, rows, dedupe=False)
+        alive = self.peer_alive(w)
+        if w == self.me:
+            virt, net_s, kind = (
+                self._models[w].write_time(n, st.row_bytes, self._qd(w)),
+                0.0, "local")
+        elif alive:
+            t_peer = self._models[w].write_time(n, st.row_bytes, self._qd(w))
+            net_s = self.net.xfer_time(n, span_bytes)
+            virt, kind = t_peer + net_s, "remote"
+        else:
+            t_deg = self._models[w].write_time(n, st.row_bytes, DEGRADED_QD)
+            net_s = self.net.xfer_time(n, span_bytes)
+            virt, kind = t_deg + net_s, "reroute"
+        return virt, net_s, span_bytes, kind, n
+
+    def _book_peer(self, kind: str, n: int, net_s: float):
+        with self._lock:
+            self.virtual_net_s += net_s
+            if kind == "local":
+                self.local_rows += n
+            elif kind == "remote":
+                self.remote_rows += n
+            else:
+                self.remote_rows += n
+                self.rerouted_rows += n
+                self.rerouted_batches += 1
+
+    def _reap_cq(self, w: int):
+        while True:
+            try:
+                comp, cqe = self._cqs[w].get_nowait()
+            except queue.Empty:
+                return
+            if isinstance(cqe, BaseException):
+                comp.shard_fail(cqe)
+            else:
+                comp.shard_done(*cqe)
+
+    def _worker(self):
+        while not self._stop:
+            try:
+                w = self._ready.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if not self._peer_lk[w].acquire(blocking=False):
+                self._ready.put(w)
+                self._ready.task_done()
+                time.sleep(2e-4)
+                continue
+            try:
+                try:
+                    kind, offs, payload, comp = self._sqs[w].get_nowait()
+                except queue.Empty:     # pragma: no cover - token per entry
+                    continue
+                try:
+                    t0 = time.perf_counter()
+                    if kind == "w":
+                        virt, net_s, span, pk, n = \
+                            self._service_peer_write(w, offs, payload)
+                    else:
+                        d, buf = payload
+                        virt, net_s, span, pk, n = \
+                            self._service_peer(w, offs, d, buf)
+                    self._book_peer(pk, n, net_s)
+                    # one peer batch == one "range" of wire traffic
+                    self._cqs[w].put((comp, (virt, 1, span,
+                                             time.perf_counter() - t0)))
+                except Exception as e:  # pragma: no cover
+                    self._cqs[w].put((comp, e))
+            finally:
+                self._peer_lk[w].release()
+                self._reap_cq(w)
+                self._ready.task_done()
+
+    # -- lifecycle -------------------------------------------------------
+    def drain(self):
+        self._ready.join()
+
+    def close(self):
+        if self._threads:
+            self.drain()
+        self._stop = True
+        for t in self._threads:
+            t.join()
+        self._threads = []
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -62,6 +62,10 @@ class TrainerConfig:
     # opened with writable=True
     train_embeddings: bool = False
     embedding_lr: float = 0.05
+    embedding_momentum: float = 0.0  # SGD momentum over the embedding rows;
+                                   # >0 keeps per-row velocity in a SECOND
+                                   # mutable table (its own store + cache)
+                                   # riding the same write-back/flush path
     embedding_flush_every: int = 0  # batches between flush barriers
                                    # (0 = flush only at epoch end / demote)
     write_policy: str = "writeback"  # writeback | writethrough (ablation)
@@ -84,17 +88,39 @@ class TrainableEmbeddingTable:
     The epoch-boundary ``flush()`` barrier makes storage authoritative for
     checkpointing."""
 
-    def __init__(self, cache: HeteroCache, lr: float):
+    def __init__(self, cache: HeteroCache, lr: float,
+                 momentum_cache: HeteroCache | None = None,
+                 momentum: float = 0.0):
         self.cache = cache
         self.lr = lr
+        # optimizer state as a SECOND mutable table: per-row velocity lives
+        # in its own store behind its own write-back cache, so momentum
+        # rows ride flush-on-demote / epoch barriers exactly like the
+        # embedding rows they accelerate
+        self.mom = momentum_cache
+        self.mu = momentum
+        self._mu_lock = threading.Lock()
 
     def apply_grads(self, ids: np.ndarray, grads: np.ndarray,
                     wait: bool = True):
         """``wait=False`` leaves the storage write-through ticket in
         flight (split-phase) — the caller completes it a batch later via
         ``cache.complete_write``, hiding the write under device compute."""
-        return self.cache.apply_delta(ids, -self.lr * np.asarray(grads),
-                                      wait=wait)
+        grads = np.asarray(grads)
+        if self.mom is None:
+            return self.cache.apply_delta(ids, -self.lr * grads, wait=wait)
+        # velocity RMW: v <- mu*v + g (duplicate ids contribute their
+        # summed gradient, matching apply_delta's own dup rule), then the
+        # embedding moves by -lr*v.  The lock makes the read-update-write
+        # atomic against concurrent pipeline batches sharing hot rows.
+        ids = np.asarray(ids)
+        uniq, inv = np.unique(ids, return_inverse=True)
+        summed = np.zeros((len(uniq), grads.shape[1]), grads.dtype)
+        np.add.at(summed, inv, grads)
+        with self._mu_lock:
+            v = self.mu * self.mom.gather(uniq) + summed
+            self.mom.write_planned(uniq, v)
+        return self.cache.apply_delta(uniq, -self.lr * v, wait=wait)
 
 
 class OutOfCoreGNNTrainer:
@@ -139,8 +165,26 @@ class OutOfCoreGNNTrainer:
         self.step_fn = make_gnn_train_step(
             cfg.model, self.opt, cfg.batch_size,
             embedding_grads=cfg.train_embeddings)
+        # optimizer-state table: velocity rows in their own writable store
+        # (zero-initialised memmaps) behind a host-tier write-back cache —
+        # the same mutable-tier machinery, second instance
+        self.mom_store = self.mom_cache = None
+        if cfg.train_embeddings and cfg.embedding_momentum > 0.0:
+            self.mom_store = FeatureStore(store.path + "_momentum",
+                                          store.n_rows, store.row_dim,
+                                          dtype=store.dtype,
+                                          n_shards=store.n_shards,
+                                          create=True, writable=True)
+            self.mom_cache = HeteroCache(
+                self.mom_store, None, 0, host_rows,
+                make_engine(cfg.mode, self.mom_store, cfg.io_worker_budget),
+                write_policy=cfg.write_policy,
+                write_combine_rows=cfg.write_combine_rows)
+            self.mom_cache._owns_engine = True
         self.embeddings = (TrainableEmbeddingTable(self.cache,
-                                                   cfg.embedding_lr)
+                                                   cfg.embedding_lr,
+                                                   self.mom_cache,
+                                                   cfg.embedding_momentum)
                            if cfg.train_embeddings else None)
         self.metrics_log = []
         # double-buffered prefetch: the ticket issued for batch i stays in
@@ -261,6 +305,10 @@ class OutOfCoreGNNTrainer:
                             + self.cache.complete_write(cur).virtual_s
                             - before)
                     ctx["wb_flush"] = self.cache.flush()
+                    if self.mom_cache is not None:
+                        # the optimizer-state table honors the same
+                        # barrier: velocity rows are restart state too
+                        ctx["wb_mom_flush"] = self.mom_cache.flush()
 
         # virtual costs under the paper envelope
         rb = self.store.row_bytes
@@ -284,7 +332,10 @@ class OutOfCoreGNNTrainer:
             return 2e-6 * (tk.shards if tk is not None else 0)
 
         def vc_complete(ctx):
-            return ctx["pending"].storage_virt
+            # storage and remote legs resolve on parallel engine queues —
+            # the operator costs the slower of the two (io_virt), which
+            # collapses to storage_virt in single-node mode
+            return ctx["pending"].io_virt
 
         def vc_lookup(ctx):
             pg = ctx["pending"]
@@ -314,7 +365,9 @@ class OutOfCoreGNNTrainer:
                     + ctx.get("wb_submit_virt", 0.0)
                     + ctx.get("wb_prev_virt", 0.0))
             fl = ctx.get("wb_flush")
-            return virt + (fl.virtual_s if fl is not None else 0.0)
+            mfl = ctx.get("wb_mom_flush")
+            return (virt + (fl.virtual_s if fl is not None else 0.0)
+                    + (mfl.virtual_s if mfl is not None else 0.0))
 
         def vc_h2d(ctx):
             # device-managed paths (Helios/GIDS) land storage + host rows in
@@ -390,6 +443,8 @@ class OutOfCoreGNNTrainer:
         if wb is not None:
             self.cache.complete_write(wb)
         epoch_flush = (self.cache.flush() if cfg.train_embeddings else None)
+        if self.mom_cache is not None:
+            self.mom_cache.flush()
         out["cache"] = {
             "hit_rate": self.cache.stats.hit_rate,
             "device_hits": self.cache.stats.device_hits,
@@ -424,6 +479,14 @@ class OutOfCoreGNNTrainer:
                 "epoch_flush_rows": epoch_flush.rows,
                 "dirty_after_flush": self.cache.n_dirty,
             }
+            if self.mom_cache is not None:
+                ms = self.mom_cache.stats
+                out["writeback"]["momentum"] = {
+                    "written_rows": ms.written_rows,
+                    "flushed_rows": ms.flushed_rows,
+                    "flushes": ms.flushes,
+                    "dirty_after_flush": self.mom_cache.n_dirty,
+                }
         out["loss_first"] = self.metrics_log[0]["loss"] if self.metrics_log else None
         out["loss_last"] = self.metrics_log[-1]["loss"] if self.metrics_log else None
         return out
@@ -431,9 +494,12 @@ class OutOfCoreGNNTrainer:
     # -----------------------------------------------------------------
     def close(self):
         """Release the IO stack: cache first (closes nothing it doesn't
-        own), then the engine this trainer created (joins its workers)."""
+        own), then the engine this trainer created (joins its workers).
+        The momentum cache owns its engine and closes it itself."""
         self.cache.close()
         self.io.close()
+        if self.mom_cache is not None:
+            self.mom_cache.close()
 
     def __enter__(self):
         return self

@@ -93,23 +93,24 @@ class MicroBatcher:
         per-request feature matrices are scattered back out of the unique
         row block; the ablation path gathers per request.  Returns
         ``(feats, n_device, n_host, n_storage, rows_fetched, storage_virt)``
-        so the server can do virtual-time and dedup accounting;
-        ``storage_virt`` is the virtual IO seconds the storage tickets
-        actually resolved with (striped/coalesced time under the async
-        engine), the same figure the cache accounted.
+        so the server can do virtual-time and dedup accounting; misses
+        count BOTH un-cached tiers (local storage and remote peers) and
+        ``storage_virt`` is the miss-path virtual seconds the tickets
+        actually resolved with — ``max`` of the storage and remote legs,
+        which run on parallel engine queues (``PendingGather.io_virt``).
         """
         if dedup:
             pending = cache.submit_planned(micro.unique_ids)
             rows = cache.complete_planned(pending)
             return ([rows[sc] for sc in micro.scatter], pending.n_device,
-                    pending.n_host, pending.n_storage,
-                    len(micro.unique_ids), pending.storage_virt)
+                    pending.n_host, pending.n_storage + pending.n_remote,
+                    len(micro.unique_ids), pending.io_virt)
         feats, n_dev, n_host, n_sto, t_sto = [], 0, 0, 0, 0.0
         for mb in micro.minibatches:
             pending = cache.submit_planned(mb.nodes)
             feats.append(cache.complete_planned(pending))
             n_dev += pending.n_device
             n_host += pending.n_host
-            n_sto += pending.n_storage
-            t_sto += pending.storage_virt
+            n_sto += pending.n_storage + pending.n_remote
+            t_sto += pending.io_virt
         return feats, n_dev, n_host, n_sto, micro.rows_requested, t_sto

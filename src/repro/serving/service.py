@@ -61,6 +61,10 @@ class ServerConfig:
                                        # micro-batch (0 = disabled)
     policy_half_life: float = 16.0
     policy_hysteresis: float = 0.1
+    write_policy: str = "writeback"    # writeback | writethrough — fleet
+                                       # replicas run writethrough so a
+                                       # peer reading shared storage after
+                                       # an owner-write sees the new value
     batch_window_v: float = 1e-3       # micro-batch time window (virtual s)
     max_batch_requests: int = 8        # micro-batch size window
     seed: int = 0
@@ -99,7 +103,8 @@ class GNNInferenceServer:
                              half_life=cfg.policy_half_life,
                              hysteresis=cfg.policy_hysteresis)
         self.cache = HeteroCache(store, None, dev_rows, host_rows, self.io,
-                                 policy=policy)
+                                 policy=policy,
+                                 write_policy=cfg.write_policy)
 
         # --- model + single compiled forward step ------------------------
         if params is None:
@@ -178,7 +183,7 @@ class GNNInferenceServer:
         # through the cache's split-phase API, same path as the trainer;
         # t_storage is the ticket-resolved virtual time (robust against a
         # shared engine serving concurrent consumers, unlike a stats delta)
-        naive_storage = sum(int((loc[u] == 2).sum())
+        naive_storage = sum(int((loc[u] >= 2).sum())
                             for u in micro.unique_per_request)
         feats, n_dev, n_host, issued_storage, rows_fetched, t_storage = \
             self.batcher.gather(self.cache, micro, cfg.dedup)

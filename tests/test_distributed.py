@@ -1,0 +1,293 @@
+"""Scale-out subsystem: partitioning, remote IO, dead-peer reroute, fleet.
+
+Everything here is deterministic — dead peers are driven through
+``FailureInjector`` alive-flags, never wall-clock heartbeats.
+"""
+import numpy as np
+import pytest
+
+from repro.core.hetero_cache import HeteroCache
+from repro.core.iostack import AsyncIOEngine, CompletionQueue, FeatureStore
+from repro.distributed.partition import (ConsistentHashPartition,
+                                         DegreeBalancedPartition,
+                                         PartitionedFeatureStore,
+                                         make_partition, reference_rows)
+from repro.distributed.remote_engine import RemoteIOEngine
+from repro.ft.failures import Coordinator, FailureInjector
+
+N_ROWS, ROW_DIM, SEED = 256, 8, 11
+
+
+# ---------------------------------------------------------------------------
+# ownership maps
+# ---------------------------------------------------------------------------
+
+def test_hash_partition_covers_and_is_stable():
+    p4 = ConsistentHashPartition(N_ROWS, 4, seed=1)
+    # total cover, valid owners
+    assert p4.owner.shape == (N_ROWS,)
+    assert p4.owner.min() >= 0 and p4.owner.max() < 4
+    assert sum(len(p4.rows_of(w)) for w in range(4)) == N_ROWS
+    # consistent hashing: adding a worker remaps only the ring arcs the
+    # new vnodes claim, never a global reshuffle
+    p5 = ConsistentHashPartition(N_ROWS, 5, seed=1)
+    moved = (p4.owner != p5.owner).mean()
+    assert 0 < moved < 0.5, f"resize moved {moved:.0%} of rows"
+
+
+def test_degree_balanced_partition_balances_traffic():
+    rng = np.random.default_rng(0)
+    deg = np.minimum(rng.zipf(1.5, N_ROWS), 64).astype(np.float64)
+    p = DegreeBalancedPartition(deg, 4)
+    loads = np.array([deg[p.rows_of(w)].sum() for w in range(4)])
+    # greedy largest-first: max load within ideal + one largest row
+    assert loads.max() <= loads.sum() / 4 + deg.max()
+    assert loads.max() <= 1.25 * max(loads.min(), 1.0)
+    # equal ROW counts would not balance this skew; degree mass does
+    assert sum(len(p.rows_of(w)) for w in range(4)) == N_ROWS
+    with pytest.raises(ValueError):
+        make_partition("degree", N_ROWS, 4)          # needs degrees
+    with pytest.raises(ValueError):
+        make_partition("nope", N_ROWS, 4)
+
+
+def test_partitioned_content_independent_of_worker_count(tmp_path):
+    """The same rng seed yields bit-identical global content no matter how
+    many workers split the rows — the foundation of every cross-mode
+    consistency gate."""
+    ref = reference_rows(np.arange(N_ROWS), ROW_DIM, SEED)
+    for w in (1, 4):
+        ps = PartitionedFeatureStore(
+            str(tmp_path / f"w{w}"), N_ROWS, ROW_DIM,
+            make_partition("hash", N_ROWS, w), n_shards=2, create=True,
+            rng_seed=SEED)
+        np.testing.assert_array_equal(ps.read_rows(np.arange(N_ROWS)), ref)
+
+
+# ---------------------------------------------------------------------------
+# remote engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def pstore(tmp_path):
+    return PartitionedFeatureStore(
+        str(tmp_path / "fleet"), N_ROWS, ROW_DIM,
+        make_partition("hash", N_ROWS, 4), n_shards=2, create=True,
+        rng_seed=SEED, writable=True)
+
+
+def test_remote_engine_reads_and_writes(pstore):
+    ref = reference_rows(np.arange(N_ROWS), ROW_DIM, SEED)
+    with RemoteIOEngine(pstore, me=0) as eng:
+        ids = np.array([0, 7, 255, 13, 13, 200])
+        data, virt = eng.submit(ids).wait()
+        np.testing.assert_array_equal(data, ref[ids])
+        assert virt > 0
+        # scatter form into a caller buffer
+        out = np.zeros((len(ids) + 1, ROW_DIM), np.float32)
+        eng.submit(ids, out, np.arange(len(ids)) + 1).wait()
+        np.testing.assert_array_equal(out[1:], ref[ids])
+        # empty batch resolves immediately
+        d0, v0 = eng.submit(np.empty(0, np.int64)).wait()
+        assert len(d0) == 0 and v0 == 0.0
+        # owner-writes: one durable copy lands at each row's owner
+        wids = np.array([3, 99, 148])
+        rows = np.full((3, ROW_DIM), 5.5, np.float32)
+        eng.submit_write(wids, rows).wait()
+        np.testing.assert_array_equal(eng.submit(wids).wait()[0], rows)
+        assert eng.local_rows > 0 and eng.remote_rows > 0
+        assert eng.rerouted_rows == 0
+
+
+def test_remote_engine_rejects_bad_requests(pstore, tmp_path):
+    ro = PartitionedFeatureStore(
+        str(tmp_path / "ro"), N_ROWS, ROW_DIM,
+        make_partition("hash", N_ROWS, 2), n_shards=2, create=True,
+        rng_seed=SEED)
+    with RemoteIOEngine(ro, me=0) as eng:
+        with pytest.raises(PermissionError):
+            eng.submit_write(np.array([1]), np.ones((1, ROW_DIM), np.float32))
+    with pytest.raises(ValueError):
+        RemoteIOEngine(pstore, me=9)
+
+
+def test_dead_peer_reroutes_without_losing_completions(pstore):
+    """Kill a peer (deterministically, via the injector's alive flag)
+    while tickets are in flight: every ticket still completes EXACTLY
+    once with correct bytes, later reads of the dead peer's rows degrade
+    to the owner's storage over the fabric (slower, counted), and no
+    completion is lost or duplicated."""
+    ref = reference_rows(np.arange(N_ROWS), ROW_DIM, SEED)
+    coord = Coordinator(n_workers=4)
+    inj = FailureInjector(kill_at={2: 1})
+    victim_rows = pstore.partition.rows_of(1)[:24]
+    with RemoteIOEngine(pstore, me=0, coordinator=coord) as eng:
+        cq = CompletionQueue()
+        tickets, batches = [], []
+        for step in range(5):
+            inj.apply(step, coord.workers)      # step 2 kills worker 1
+            ids = np.concatenate([victim_rows[:12],
+                                  pstore.partition.rows_of(0)[:4]])
+            batches.append(ids)
+            tickets.append(eng.submit(ids, cq=cq))
+        done = cq.drain()
+        # exactly once each: no lost, no duplicated completions
+        assert len(done) == len(tickets)
+        assert {id(t) for t in done} == {id(t) for t in tickets}
+        for tk, ids in zip(tickets, batches):
+            np.testing.assert_array_equal(tk.wait()[0], ref[ids])
+        assert not eng.peer_alive(1)
+        assert eng.rerouted_rows > 0 and eng.rerouted_batches > 0
+        # degraded reroute prices the same rows SLOWER than a live peer
+        t_dead = eng.submit(victim_rows).wait()[1]
+        coord.workers[1].alive = True
+        t_live = eng.submit(victim_rows).wait()[1]
+        assert t_dead > t_live
+
+
+# ---------------------------------------------------------------------------
+# remote tier in the cache + cross-mode consistency
+# ---------------------------------------------------------------------------
+
+def test_cache_remote_tier_consistency_across_modes(tmp_path):
+    """One request trace, three data-path modes — single-store async
+    engine, single-worker fleet, 4-worker fleet with the remote tier
+    live — must produce bit-identical gather results (the scale_out
+    bench's consistency gate, in miniature)."""
+    ref = reference_rows(np.arange(N_ROWS), ROW_DIM, SEED)
+    rng = np.random.default_rng(3)
+    trace = [rng.integers(0, N_ROWS, 48) for _ in range(6)]
+
+    # seed the single-store reference with the SAME content stream the
+    # partitioned stores are created from
+    with AsyncIOEngine(FeatureStore(str(tmp_path / "single"), N_ROWS,
+                                    ROW_DIM, n_shards=2, create=True,
+                                    writable=True)) as seeder:
+        seeder.submit_write(np.arange(N_ROWS), ref).wait()
+    outs = []
+    for w, name in ((0, "async"), (1, "fleet1"), (4, "fleet4")):
+        if w == 0:
+            st = FeatureStore(str(tmp_path / "single"), N_ROWS, ROW_DIM,
+                              n_shards=2)
+            eng = AsyncIOEngine(st)
+        else:
+            st = PartitionedFeatureStore(
+                str(tmp_path / name), N_ROWS, ROW_DIM,
+                make_partition("hash", N_ROWS, w), n_shards=2, create=True,
+                rng_seed=SEED)
+            eng = RemoteIOEngine(st, me=0)
+        cache = HeteroCache(st, np.zeros(N_ROWS), 16, 32, io_engine=eng)
+        got = [cache.gather(ids).copy() for ids in trace]
+        if w == 4:
+            assert cache.stats.remote_hits > 0      # tier actually used
+        outs.append(got)
+        cache.close()
+        eng.close()
+    for got in outs[1:]:
+        for a, b in zip(outs[0], got):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_cache_remote_tier_prefetch_and_refresh(pstore):
+    """Placement, refresh, and prefetch treat remote rows as admissible
+    (loc >= 2) and demote victims back to their true base tier."""
+    from repro.core.policy import OnlineDecayPolicy
+    ref = reference_rows(np.arange(N_ROWS), ROW_DIM, SEED)
+    eng = RemoteIOEngine(pstore, me=0)
+    cache = HeteroCache(pstore, device_rows=8, host_rows=16, io_engine=eng,
+                        policy=OnlineDecayPolicy(N_ROWS, refresh_every=2))
+    remote_ids = pstore.partition.rows_of(2)[:8]
+    for _ in range(4):
+        np.testing.assert_array_equal(cache.gather(remote_ids),
+                                      ref[remote_ids])
+        cache.maybe_refresh()
+        cache.maybe_prefetch(k=8)
+    # base-tier bookkeeping: un-cached rows sit at their TRUE base
+    un_dev = cache.loc >= 2
+    np.testing.assert_array_equal(cache.loc[un_dev],
+                                  cache._base_loc[un_dev])
+    # hot remote rows should now be cached (remote tier feeds promotion)
+    assert (cache.loc[remote_ids] < 2).any()
+    cache.close()
+
+
+# ---------------------------------------------------------------------------
+# optimizer state as a second mutable table
+# ---------------------------------------------------------------------------
+
+def test_momentum_table_read_your_writes(tmp_path):
+    from repro.gnn.train import TrainableEmbeddingTable
+    emb_store = FeatureStore(str(tmp_path / "emb"), N_ROWS, ROW_DIM,
+                             n_shards=2, create=True, rng_seed=1,
+                             writable=True)
+    mom_store = FeatureStore(str(tmp_path / "mom"), N_ROWS, ROW_DIM,
+                             n_shards=2, create=True, writable=True)
+    emb_cache = HeteroCache(emb_store, np.zeros(N_ROWS), 4, 8)
+    mom_cache = HeteroCache(mom_store, np.zeros(N_ROWS), 0, 8)
+    lr, mu = 0.1, 0.9
+    table = TrainableEmbeddingTable(emb_cache, lr, mom_cache, mu)
+    ids = np.array([1, 5, 250])
+    base = emb_cache.gather(ids).copy()
+    g1 = np.ones((3, ROW_DIM), np.float32)
+    table.apply_grads(ids, g1)
+    # velocity starts at zero: v1 = g1; embedding -= lr * v1
+    np.testing.assert_allclose(mom_cache.gather(ids), g1, rtol=1e-6)
+    np.testing.assert_allclose(emb_cache.gather(ids), base - lr * g1,
+                               rtol=1e-5)
+    g2 = np.full((3, ROW_DIM), 2.0, np.float32)
+    table.apply_grads(ids, g2)
+    v2 = mu * g1 + g2
+    np.testing.assert_allclose(mom_cache.gather(ids), v2, rtol=1e-6)
+    np.testing.assert_allclose(emb_cache.gather(ids),
+                               base - lr * g1 - lr * v2, rtol=1e-5)
+    # both mutable tables flush durable: storage alone reproduces them
+    emb_cache.flush()
+    mom_cache.flush()
+    np.testing.assert_allclose(mom_store.read_rows(ids), v2, rtol=1e-6)
+    np.testing.assert_allclose(emb_store.read_rows(ids),
+                               base - lr * g1 - lr * v2, rtol=1e-5)
+    emb_cache.close()
+    mom_cache.close()
+
+
+# ---------------------------------------------------------------------------
+# serving fleet
+# ---------------------------------------------------------------------------
+
+def test_fleet_router_and_coherence(tmp_path):
+    from repro.distributed.fleet import PowerOfTwoRouter, ServingFleet
+    from repro.gnn.graph import synth_graph
+    from repro.serving.service import ServerConfig
+
+    r = PowerOfTwoRouter(4, seed=0)
+    depths = [5, 0, 5, 5]
+    picks = {r.pick(depths) for _ in range(32)}
+    assert 1 in picks                   # shorter queue wins its probes
+
+    g = synth_graph(600, 5, skew=1.2, seed=0)
+    store = FeatureStore(str(tmp_path / "feats"), 600, 16, n_shards=2,
+                         create=True, rng_seed=0, writable=True)
+    cfg = ServerConfig(request_batch_size=8, fanouts=(3, 2), hidden=8,
+                       device_cache_frac=0.05, host_cache_frac=0.10,
+                       presample_batches=1, seed=0)
+    with ServingFleet(g, store, n_replicas=3, cfg=cfg, seed=1) as fleet:
+        # replicas run writethrough so owner writes are fleet-visible
+        assert all(rep.cache.write_policy == "writethrough"
+                   for rep in fleet.replicas)
+        rng = np.random.default_rng(2)
+        futs = [fleet.submit(rng.choice(600, 8, replace=False))
+                for _ in range(9)]
+        fleet.flush()
+        assert all(f.result() is not None for f, _ in futs)
+        assert fleet.router.route_counts.sum() == 9
+
+        # owner-writes + version invalidation: every replica serves the
+        # new value, and re-settling is free (version check)
+        hot = np.arange(40)
+        new = np.full((40, 16), 7.5, np.float32)
+        fleet.write_embeddings(hot, new)
+        for i, rep in enumerate(fleet.replicas):
+            fleet._settle_invalidations(i)
+            np.testing.assert_array_equal(rep.cache.gather(hot), new)
+        assert fleet._settle_invalidations(0) == 0
+        assert fleet.invalidated_rows > 0

@@ -185,17 +185,47 @@ def _wb_store():
     return _WB_STORE
 
 
+_WB_PSTORE = None
+
+
+def _wb_pstore():
+    """Writable 3-worker partitioned fleet sharing the single-store
+    geometry (96 x 4), for the remote-tier properties."""
+    global _WB_PSTORE
+    if _WB_PSTORE is None:
+        import tempfile
+        from repro.distributed.partition import (PartitionedFeatureStore,
+                                                 make_partition)
+        _WB_PSTORE = PartitionedFeatureStore(
+            tempfile.mkdtemp(prefix="prop_wb_remote_"), 96, 4,
+            make_partition("hash", 96, 3), n_shards=2, create=True,
+            rng_seed=7, writable=True)
+    return _WB_PSTORE
+
+
 def _wb_engine(mode):
     if mode not in _WB_ENGINES:
         from repro.core.iostack import (AsyncIOEngine, CPUManagedEngine,
                                         SyncIOEngine)
-        _WB_ENGINES[mode] = {
-            "helios": AsyncIOEngine, "gids": SyncIOEngine,
-            "cpu": CPUManagedEngine}[mode](_wb_store())
+        if mode == "remote":
+            from repro.distributed.remote_engine import RemoteIOEngine
+            _WB_ENGINES[mode] = RemoteIOEngine(_wb_pstore(), me=0)
+        else:
+            _WB_ENGINES[mode] = {
+                "helios": AsyncIOEngine, "gids": SyncIOEngine,
+                "cpu": CPUManagedEngine}[mode](_wb_store())
     return _WB_ENGINES[mode]
 
 
-@pytest.mark.parametrize("mode", ["helios", "gids", "cpu"])
+def _wb_setup(mode):
+    """(store, engine) pair for a mode — the remote mode swaps in the
+    partitioned fleet store so rows not owned by worker 0 become the
+    cache's fourth (remote) tier."""
+    eng = _wb_engine(mode)
+    return (_wb_pstore() if mode == "remote" else _wb_store()), eng
+
+
+@pytest.mark.parametrize("mode", ["helios", "gids", "cpu", "remote"])
 @given(ops=st.lists(
     st.tuples(st.sampled_from(["write", "gather", "refresh", "flush",
                                "prefetch"]),
@@ -208,13 +238,15 @@ def test_writeback_read_your_writes(mode, ops, tiers):
     gather never loses a written value: every gather sees exactly the
     shadow model (read-your-writes across tier migration), and after the
     final flush barrier STORAGE alone reproduces it — under all three
-    engine modes."""
+    single-node engine modes AND the peer-striped remote engine (where
+    rows owned by other workers form the cache's fourth tier and writes
+    land at their owner, owner-writes)."""
     from repro.core.hetero_cache import HeteroCache
-    store = _wb_store()
+    store, eng = _wb_setup(mode)
     n = store.n_rows
     all_ids = np.arange(n)
     cache = HeteroCache(store, np.zeros(n), tiers[0], tiers[1],
-                        io_engine=_wb_engine(mode))
+                        io_engine=eng)
     shadow = store.read_rows(all_ids)             # current durable truth
     for op, seed in ops:
         rng = np.random.default_rng(seed)
@@ -245,7 +277,7 @@ def test_writeback_read_your_writes(mode, ops, tiers):
     cache.close()
 
 
-@pytest.mark.parametrize("mode", ["helios", "gids", "cpu"])
+@pytest.mark.parametrize("mode", ["helios", "gids", "cpu", "remote"])
 @given(batches=st.lists(hnp.arrays(np.int64, st.integers(0, 120),
                                    elements=st.integers(0, 95)),
                         min_size=1, max_size=8),
@@ -255,13 +287,15 @@ def test_ooo_harvest_matches_fifo_property(mode, batches, order_seed):
     """Ticket results are IDENTICAL whether the caller drains them FIFO
     via wait() or harvests them in an arbitrary out-of-order interleaving
     (CompletionQueue + random try_complete polling) — under all three
-    engine modes, for ANY batch multiset.  Completion order must never
-    leak into payloads."""
+    single-node engine modes plus the peer-striped RemoteIOEngine, for
+    ANY batch multiset.  Completion order must never leak into payloads."""
     from repro.core.iostack import (CompletionQueue, CPUManagedEngine,
                                     SyncIOEngine)
     store = _prop_store()
     if mode == "helios":
         eng = _prop_engine(0)           # shared striped AsyncIOEngine
+    elif mode == "remote":
+        eng = _wb_engine("remote")      # shared peer-striped engine
     else:
         eng = (SyncIOEngine if mode == "gids" else CPUManagedEngine)(store)
     fifo = [eng.submit(b).wait()[0] for b in batches]
