@@ -32,6 +32,11 @@ GATES = {
         # the same engine waited inline (the overlap lever in isolation)
         ("io_path/overlap/summary", "x_split_vs_sync", ">=", 2.0),
         ("io_path/overlap/summary", "x_split_vs_inline", ">", 1.0),
+        # fused lookup: duplicate-collapsed miss list must buy >= 2x
+        # lookup-phase virtual throughput over the host plan()/dedup path
+        # on duplicate-heavy batches, with bit-identical gather outputs
+        ("io_path/fused/summary", "x_fused_vs_host", ">=", 2.0),
+        ("io_path/fused/summary", "identical_ok", "==", 1.0),
     ],
     "cache_policy": [
         (f"cache_policy/{mode}/summary", key, op, thr)

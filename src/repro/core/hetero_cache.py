@@ -29,6 +29,7 @@ kernel is validated in interpret mode by the kernel tests.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from dataclasses import dataclass
@@ -197,10 +198,10 @@ class PendingGather:
 
     __slots__ = ("ids", "plan", "out", "ticket", "rticket", "device_tier",
                  "host_tier", "t0", "done", "storage_virt", "remote_virt",
-                 "wc_patch", "_looked", "_dev_rows", "_lk")
+                 "wc_patch", "occ", "dup_fill", "_looked", "_dev_rows", "_lk")
 
     def __init__(self, ids, plan, out, ticket, device_tier, host_tier,
-                 wc_patch=None, rticket=None):
+                 wc_patch=None, rticket=None, occ=None, dup_fill=None):
         self.ids = ids
         self.plan = plan
         self.out = out
@@ -209,6 +210,12 @@ class PendingGather:
         self.device_tier = device_tier
         self.host_tier = host_tier
         self.wc_patch = wc_patch        # (dests, rows) write-combiner overlay
+        # fused-path extras: ``occ`` keeps OCCURRENCE tier counts (the plan
+        # legs carry deduplicated IO lists, so stats stay comparable with
+        # the host path), ``dup_fill`` = (dup_dest, first_dest) replicates
+        # IO-landed rows into duplicate positions at completion
+        self.occ = occ
+        self.dup_fill = dup_fill
         self.t0 = time.perf_counter()
         self.done = False
         self.storage_virt = 0.0         # virtual s the ticket resolved with
@@ -219,19 +226,19 @@ class PendingGather:
 
     @property
     def n_device(self) -> int:
-        return len(self.plan[0][0])
+        return self.occ[0] if self.occ is not None else len(self.plan[0][0])
 
     @property
     def n_host(self) -> int:
-        return len(self.plan[1][0])
+        return self.occ[1] if self.occ is not None else len(self.plan[1][0])
 
     @property
     def n_storage(self) -> int:
-        return len(self.plan[2][0])
+        return self.occ[2] if self.occ is not None else len(self.plan[2][0])
 
     @property
     def n_remote(self) -> int:
-        return len(self.plan[3][0])
+        return self.occ[3] if self.occ is not None else len(self.plan[3][0])
 
     @property
     def io_virt(self) -> float:
@@ -271,10 +278,25 @@ class HeteroCache:
                  policy: CachePolicy | None = None,
                  write_policy: str = "writeback",
                  write_combine_rows: int = 0,
-                 remote_mask: np.ndarray | None = None):
+                 remote_mask: np.ndarray | None = None,
+                 fused: bool = True,
+                 fused_backend: str | None = None):
         if write_policy not in ("writeback", "writethrough"):
             raise ValueError(f"unknown write_policy {write_policy!r} "
                              "(expected writeback | writethrough)")
+        # fused lookup (PR 7): plan + dedup + tier split in ONE pass, with
+        # deduplicated storage/remote miss lists fed to the IO engine (the
+        # paper's GPU-initiated IO).  ``fused=False`` keeps the PR-3 host
+        # plan() as an ablation.  Backends: "host" (vectorized numpy,
+        # default), "pallas" (fused TPU kernel), "pallas-interpret" (same
+        # kernel, interpreter — what CI runs; no TPU there).
+        backend = fused_backend or os.environ.get("HELIOS_FUSED_BACKEND",
+                                                  "host")
+        if backend not in ("host", "pallas", "pallas-interpret"):
+            raise ValueError(f"unknown fused_backend {backend!r}")
+        self.fused = fused
+        self._fused_backend = backend
+        self._fi_tls = threading.local()    # per-thread first-occurrence scratch
         self.store = store
         self.env = env
         self.write_policy = write_policy
@@ -364,17 +386,93 @@ class HeteroCache:
         return ((slots[d], dest[d]), (slots[h], dest[h]),
                 (ids[m], dest[m]), (ids[r], dest[r]))
 
+    def _first_indices(self, ids: np.ndarray) -> np.ndarray:
+        """First-occurrence index of every id within the batch, O(B) with a
+        persistent per-thread scratch (no sort, the host analogue of the
+        kernel's VPU compare).  Fancy assignment with duplicate indices
+        keeps the LAST write, so scattering reversed positions leaves the
+        smallest position per id."""
+        scr = getattr(self._fi_tls, "scr", None)
+        if scr is None:
+            scr = self._fi_tls.scr = np.full(self.store.n_rows, -1, np.int64)
+        pos = np.arange(len(ids))
+        scr[ids[::-1]] = pos[::-1]
+        fi = scr[ids]
+        scr[ids] = -1                   # restore sentinel for the next batch
+        return fi
+
+    def _fused_plan_host(self, ids, loc, slot):
+        """Fused plan, host backend: ONE vectorized pass does the tier
+        lookup, duplicate collapse, and per-tier split; the storage/remote
+        legs carry only FIRST occurrences (the deduplicated miss list the
+        IO engines see)."""
+        where = loc[ids]
+        slots = slot[ids]
+        dest = np.arange(len(ids))
+        fi = self._first_indices(ids)
+        is_first = fi == dest
+        d = where == 0
+        h = where == 1
+        m = where == 2
+        r = where == 3
+        mf = m & is_first
+        rf = r & is_first
+        dup = ~is_first & (where >= 2)
+        plan = ((slots[d], dest[d]), (slots[h], dest[h]),
+                (ids[mf], dest[mf]), (ids[rf], dest[rf]))
+        occ = (int(d.sum()), int(h.sum()), int(m.sum()), int(r.sum()))
+        dup_fill = (dest[dup], fi[dup]) if dup.any() else None
+        return plan, occ, dup_fill, None
+
+    def _fused_plan_pallas(self, ids, loc, slot, device_tier, host_tier):
+        """Fused plan, Pallas backend: the whole phase — lookup, dedup,
+        device+host tier gather/scatter, and compacted miss-list emission —
+        is one kernel launch (see kernels/cache_lookup/).  Returns the
+        pre-gathered output rows so phase 2 becomes a no-op."""
+        from repro.kernels.cache_lookup.ops import fused_cache_lookup
+        kout, fi, mid, mdst, rid, rdst, cnt = fused_cache_lookup(
+            np.ascontiguousarray(ids), loc, slot, device_tier, host_tier,
+            use_pallas=True,
+            interpret=self._fused_backend == "pallas-interpret")
+        cnt = np.asarray(cnt)
+        nm, nr = int(cnt[0]), int(cnt[1])
+        fi = np.asarray(fi, dtype=np.int64)
+        where = loc[ids]
+        dest = np.arange(len(ids))
+        dup = (fi != dest) & (where >= 2)
+        empty = np.empty(0, np.int64)
+        plan = ((empty, empty), (empty, empty),
+                (np.asarray(mid, np.int64)[:nm],
+                 np.asarray(mdst, np.int64)[:nm]),
+                (np.asarray(rid, np.int64)[:nr],
+                 np.asarray(rdst, np.int64)[:nr]))
+        occ = (int((where == 0).sum()), int((where == 1).sum()),
+               int((where == 2).sum()), int((where == 3).sum()))
+        dup_fill = (dest[dup], fi[dup]) if dup.any() else None
+        return plan, occ, dup_fill, np.asarray(kout, self.store.dtype)
+
     def submit_planned(self, ids: np.ndarray,
                        n_rows: int | None = None) -> PendingGather:
-        """Phase 1: snapshot tables, split by tier, and fire the storage
+        """Phase 1: snapshot tables, split by tier (fused lookup by
+        default: dedup collapses duplicate ids so the miss list the IO
+        engine sees carries each row once), and fire the storage
         submission (longest latency first — paper ordering).  ``n_rows``
         pads the output buffer (trainer batches are shape-padded)."""
         with self._table_lock:
             loc, slot = self.loc, self.slot
             device_tier, host_tier = self.device_tier, self.host_tier
-        plan = self.plan(ids, loc, slot)
+        pre = dup_fill = occ = None
+        if not self.fused or len(ids) == 0:
+            plan = self.plan(ids, loc, slot)
+        elif self._fused_backend == "host":
+            plan, occ, dup_fill, pre = self._fused_plan_host(ids, loc, slot)
+        else:
+            plan, occ, dup_fill, pre = self._fused_plan_pallas(
+                ids, loc, slot, device_tier, host_tier)
         n_out = len(ids) if n_rows is None else n_rows
         out = np.zeros((n_out, self.store.row_dim), self.store.dtype)
+        if pre is not None:
+            out[:len(ids)] = pre
         sids, sdest = plan[2]
         rids, rdest = plan[3]
         # write-combiner overlay, captured at SUBMIT time: a buffered row
@@ -406,8 +504,14 @@ class HeteroCache:
                 rticket = self.io.submit(rids, out, rdest, tag="remote")
             if len(sids):
                 ticket = self.io.submit(sids, out, sdest)
-        return PendingGather(ids, plan, out, ticket, device_tier, host_tier,
-                             wc_patch, rticket=rticket)
+        pg = PendingGather(ids, plan, out, ticket, device_tier, host_tier,
+                           wc_patch, rticket=rticket, occ=occ,
+                           dup_fill=dup_fill)
+        if pre is not None:
+            # the kernel already gathered the device+host tiers into the
+            # output buffer — phase 2 has nothing left to do
+            pg._looked = True
+        return pg
 
     def lookup_planned(self, pg: PendingGather) -> None:
         """Phase 2: host-tier gather into the buffer + device-tier gather
@@ -443,6 +547,11 @@ class HeteroCache:
                 # storage rows the ticket just landed
                 dests, rows = pg.wc_patch
                 pg.out[dests] = rows
+            if pg.dup_fill is not None:
+                # fused dedup issued each missed row once; replicate the
+                # landed (and overlay-patched) row into duplicate slots
+                dd, ds = pg.dup_fill
+                pg.out[dd] = pg.out[ds]
             pg.storage_virt = virt_sto
             pg.remote_virt = virt_rem
             pg.done = True

@@ -67,7 +67,9 @@ class ServingFleet:
         cfg = cfg if cfg is not None else ServerConfig()
         if store.writable:
             # fleet coherence needs owner writes visible to peers via the
-            # shared store the moment the ticket lands
+            # shared store the moment the ticket lands; every other knob
+            # (including fused_lookup — each replica's cache runs the fused
+            # dedup plan over its own loc/slot tables) rides through
             cfg = ServerConfig(**{**cfg.__dict__,
                                   "write_policy": "writethrough"})
         self.cfg = cfg

@@ -51,6 +51,9 @@ class TrainerConfig:
     io_worker_budget: float = 0.3
     presample_batches: int = 8
     cache_policy: str = "static"   # static | online (core.policy)
+    fused_lookup: bool = True      # fused plan+dedup+tier-split cache lookup
+                                   # with deduplicated miss lists (PR 7);
+                                   # False = PR-3 host plan() ablation
     refresh_every: int = 8         # batches between refresh checks (online)
     prefetch_rows: int = 0         # predicted-hot rows pulled per batch by
                                    # the prefetch operator (0 = disabled)
@@ -66,6 +69,12 @@ class TrainerConfig:
                                    # >0 keeps per-row velocity in a SECOND
                                    # mutable table (its own store + cache)
                                    # riding the same write-back/flush path
+    embedding_adam: float = 0.0    # Adam beta2: >0 keeps the per-row second
+                                   # moment in a THIRD mutable table on the
+                                   # same write-back/flush path; combines
+                                   # with embedding_momentum as beta1-style
+                                   # velocity (lazy sparse Adam)
+    embedding_adam_eps: float = 1e-8
     embedding_flush_every: int = 0  # batches between flush barriers
                                    # (0 = flush only at epoch end / demote)
     write_policy: str = "writeback"  # writeback | writethrough (ablation)
@@ -90,15 +99,22 @@ class TrainableEmbeddingTable:
 
     def __init__(self, cache: HeteroCache, lr: float,
                  momentum_cache: HeteroCache | None = None,
-                 momentum: float = 0.0):
+                 momentum: float = 0.0,
+                 adam_cache: HeteroCache | None = None,
+                 adam_beta2: float = 0.0, adam_eps: float = 1e-8):
         self.cache = cache
         self.lr = lr
-        # optimizer state as a SECOND mutable table: per-row velocity lives
-        # in its own store behind its own write-back cache, so momentum
-        # rows ride flush-on-demote / epoch barriers exactly like the
-        # embedding rows they accelerate
+        # optimizer state as SIBLING mutable tables: per-row velocity (and,
+        # for Adam, the per-row second moment) lives in its own store
+        # behind its own write-back cache, so optimizer rows ride
+        # flush-on-demote / epoch barriers exactly like the embedding rows
+        # they accelerate
         self.mom = momentum_cache
         self.mu = momentum
+        self.v2 = adam_cache
+        self.b2 = adam_beta2
+        self.eps = adam_eps
+        self._t = 0                     # global step for bias correction
         self._mu_lock = threading.Lock()
 
     def apply_grads(self, ids: np.ndarray, grads: np.ndarray,
@@ -107,20 +123,37 @@ class TrainableEmbeddingTable:
         flight (split-phase) — the caller completes it a batch later via
         ``cache.complete_write``, hiding the write under device compute."""
         grads = np.asarray(grads)
-        if self.mom is None:
+        if self.mom is None and self.v2 is None:
             return self.cache.apply_delta(ids, -self.lr * grads, wait=wait)
-        # velocity RMW: v <- mu*v + g (duplicate ids contribute their
-        # summed gradient, matching apply_delta's own dup rule), then the
-        # embedding moves by -lr*v.  The lock makes the read-update-write
-        # atomic against concurrent pipeline batches sharing hot rows.
+        # optimizer-state RMW (duplicate ids contribute their summed
+        # gradient, matching apply_delta's own dup rule).  The lock makes
+        # the read-update-write atomic against concurrent pipeline batches
+        # sharing hot rows.
         ids = np.asarray(ids)
         uniq, inv = np.unique(ids, return_inverse=True)
         summed = np.zeros((len(uniq), grads.shape[1]), grads.dtype)
         np.add.at(summed, inv, grads)
         with self._mu_lock:
-            v = self.mu * self.mom.gather(uniq) + summed
-            self.mom.write_planned(uniq, v)
-        return self.cache.apply_delta(uniq, -self.lr * v, wait=wait)
+            if self.mom is not None:
+                # velocity: v <- mu*v + g
+                v = self.mu * self.mom.gather(uniq) + summed
+                self.mom.write_planned(uniq, v)
+            else:
+                v = summed
+            if self.v2 is None:
+                delta = -self.lr * v
+            else:
+                # lazy sparse Adam: the second moment updates only for rows
+                # present in the batch, and bias correction uses the GLOBAL
+                # step (per-row step counts are not tracked — the standard
+                # out-of-core embedding compromise)
+                self._t += 1
+                m2 = (self.b2 * self.v2.gather(uniq)
+                      + (1.0 - self.b2) * summed ** 2)
+                self.v2.write_planned(uniq, m2)
+                denom = np.sqrt(m2 / (1.0 - self.b2 ** self._t)) + self.eps
+                delta = -self.lr * v / denom
+        return self.cache.apply_delta(uniq, delta, wait=wait)
 
 
 class OutOfCoreGNNTrainer:
@@ -154,7 +187,8 @@ class OutOfCoreGNNTrainer:
         self.cache = HeteroCache(store, None, dev_rows, host_rows, self.io,
                                  policy=policy,
                                  write_policy=cfg.write_policy,
-                                 write_combine_rows=cfg.write_combine_rows)
+                                 write_combine_rows=cfg.write_combine_rows,
+                                 fused=cfg.fused_lookup)
 
         # --- model + optimizer -------------------------------------------
         key = jax.random.key(cfg.seed)
@@ -165,26 +199,37 @@ class OutOfCoreGNNTrainer:
         self.step_fn = make_gnn_train_step(
             cfg.model, self.opt, cfg.batch_size,
             embedding_grads=cfg.train_embeddings)
-        # optimizer-state table: velocity rows in their own writable store
-        # (zero-initialised memmaps) behind a host-tier write-back cache —
-        # the same mutable-tier machinery, second instance
-        self.mom_store = self.mom_cache = None
-        if cfg.train_embeddings and cfg.embedding_momentum > 0.0:
-            self.mom_store = FeatureStore(store.path + "_momentum",
-                                          store.n_rows, store.row_dim,
-                                          dtype=store.dtype,
-                                          n_shards=store.n_shards,
-                                          create=True, writable=True)
-            self.mom_cache = HeteroCache(
-                self.mom_store, None, 0, host_rows,
-                make_engine(cfg.mode, self.mom_store, cfg.io_worker_budget),
+        # optimizer-state tables: per-row velocity (momentum) and second
+        # moment (Adam) in their own writable stores (zero-initialised
+        # memmaps) behind host-tier write-back caches — the same
+        # mutable-tier machinery, sibling instances
+        def _opt_table(suffix):
+            st = FeatureStore(store.path + suffix, store.n_rows,
+                              store.row_dim, dtype=store.dtype,
+                              n_shards=store.n_shards,
+                              create=True, writable=True)
+            c = HeteroCache(
+                st, None, 0, host_rows,
+                make_engine(cfg.mode, st, cfg.io_worker_budget),
                 write_policy=cfg.write_policy,
-                write_combine_rows=cfg.write_combine_rows)
-            self.mom_cache._owns_engine = True
+                write_combine_rows=cfg.write_combine_rows,
+                fused=cfg.fused_lookup)
+            c._owns_engine = True
+            return st, c
+
+        self.mom_store = self.mom_cache = None
+        self.adam_store = self.adam_cache = None
+        if cfg.train_embeddings and cfg.embedding_momentum > 0.0:
+            self.mom_store, self.mom_cache = _opt_table("_momentum")
+        if cfg.train_embeddings and cfg.embedding_adam > 0.0:
+            self.adam_store, self.adam_cache = _opt_table("_adam")
         self.embeddings = (TrainableEmbeddingTable(self.cache,
                                                    cfg.embedding_lr,
                                                    self.mom_cache,
-                                                   cfg.embedding_momentum)
+                                                   cfg.embedding_momentum,
+                                                   self.adam_cache,
+                                                   cfg.embedding_adam,
+                                                   cfg.embedding_adam_eps)
                            if cfg.train_embeddings else None)
         self.metrics_log = []
         # double-buffered prefetch: the ticket issued for batch i stays in
@@ -306,9 +351,11 @@ class OutOfCoreGNNTrainer:
                             - before)
                     ctx["wb_flush"] = self.cache.flush()
                     if self.mom_cache is not None:
-                        # the optimizer-state table honors the same
+                        # the optimizer-state tables honor the same
                         # barrier: velocity rows are restart state too
                         ctx["wb_mom_flush"] = self.mom_cache.flush()
+                    if self.adam_cache is not None:
+                        ctx["wb_adam_flush"] = self.adam_cache.flush()
 
         # virtual costs under the paper envelope
         rb = self.store.row_bytes
@@ -366,8 +413,10 @@ class OutOfCoreGNNTrainer:
                     + ctx.get("wb_prev_virt", 0.0))
             fl = ctx.get("wb_flush")
             mfl = ctx.get("wb_mom_flush")
+            afl = ctx.get("wb_adam_flush")
             return (virt + (fl.virtual_s if fl is not None else 0.0)
-                    + (mfl.virtual_s if mfl is not None else 0.0))
+                    + (mfl.virtual_s if mfl is not None else 0.0)
+                    + (afl.virtual_s if afl is not None else 0.0))
 
         def vc_h2d(ctx):
             # device-managed paths (Helios/GIDS) land storage + host rows in
@@ -445,6 +494,8 @@ class OutOfCoreGNNTrainer:
         epoch_flush = (self.cache.flush() if cfg.train_embeddings else None)
         if self.mom_cache is not None:
             self.mom_cache.flush()
+        if self.adam_cache is not None:
+            self.adam_cache.flush()
         out["cache"] = {
             "hit_rate": self.cache.stats.hit_rate,
             "device_hits": self.cache.stats.device_hits,
@@ -487,6 +538,14 @@ class OutOfCoreGNNTrainer:
                     "flushes": ms.flushes,
                     "dirty_after_flush": self.mom_cache.n_dirty,
                 }
+            if self.adam_cache is not None:
+                vs = self.adam_cache.stats
+                out["writeback"]["adam"] = {
+                    "written_rows": vs.written_rows,
+                    "flushed_rows": vs.flushed_rows,
+                    "flushes": vs.flushes,
+                    "dirty_after_flush": self.adam_cache.n_dirty,
+                }
         out["loss_first"] = self.metrics_log[0]["loss"] if self.metrics_log else None
         out["loss_last"] = self.metrics_log[-1]["loss"] if self.metrics_log else None
         return out
@@ -495,11 +554,14 @@ class OutOfCoreGNNTrainer:
     def close(self):
         """Release the IO stack: cache first (closes nothing it doesn't
         own), then the engine this trainer created (joins its workers).
-        The momentum cache owns its engine and closes it itself."""
+        The optimizer-state caches own their engines and close them
+        themselves."""
         self.cache.close()
         self.io.close()
         if self.mom_cache is not None:
             self.mom_cache.close()
+        if self.adam_cache is not None:
+            self.adam_cache.close()
 
     def __enter__(self):
         return self

@@ -1,0 +1,35 @@
+"""Jitted public wrapper for the fused cache-lookup kernel.
+
+``use_pallas=True`` on real TPUs; the container validates the kernel in
+interpret mode (kernel tests and the ``HELIOS_FUSED_BACKEND`` CI leg).
+Empty cache tiers are padded with one zero row before dispatch — an empty
+tier has no ids mapped to it, so the pad row is never selected.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cache_lookup.cache_lookup import fused_lookup
+from repro.kernels.cache_lookup.ref import fused_lookup_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def fused_cache_lookup(ids, loc, slot, device_tier, host_tier,
+                       use_pallas: bool = False, interpret: bool = True):
+    """Fused lookup + dedup gather + miss-list emit; see cache_lookup.py
+    for the 7-tuple output contract."""
+    ids = jnp.asarray(ids, jnp.int32)
+    loc = jnp.asarray(loc, jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    dev = jnp.asarray(device_tier)
+    host = jnp.asarray(host_tier)
+    if dev.shape[0] == 0:
+        dev = jnp.zeros((1, dev.shape[1]), dev.dtype)
+    if host.shape[0] == 0:
+        host = jnp.zeros((1, host.shape[1]), host.dtype)
+    if use_pallas:
+        return fused_lookup(ids, loc, slot, dev, host, interpret=interpret)
+    return fused_lookup_ref(ids, loc, slot, dev, host)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the fused cache-lookup kernel.
+
+Same contract as ``cache_lookup.fused_lookup`` (see that module's
+docstring): fixed-shape padded outputs, first-occurrence dedup, compacted
+storage/remote miss lists in batch order.  The dedup is a scatter-min into
+an N-sized table (the same footprint as the loc/slot tables themselves)
+rather than a sort, mirroring the kernel's O(B) VPU compare.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_lookup_ref(ids, loc, slot, device_tier, host_tier):
+    ids = ids.astype(jnp.int32)
+    B = ids.shape[0]
+    pos = jnp.arange(B, dtype=jnp.int32)
+
+    first_tab = jnp.full((loc.shape[0],), B, jnp.int32).at[ids].min(pos)
+    first_idx = first_tab[ids]
+    is_first = first_idx == pos
+
+    tier = loc[ids].astype(jnp.int32)
+    slots = slot[ids].astype(jnp.int32)
+    drows = jnp.take(device_tier, jnp.where(tier == 0, slots, 0), axis=0)
+    hrows = jnp.take(host_tier, jnp.where(tier == 1, slots, 0), axis=0)
+    out = jnp.where((tier == 0)[:, None], drows,
+                    jnp.where((tier == 1)[:, None],
+                              hrows.astype(device_tier.dtype),
+                              jnp.zeros_like(drows)))
+
+    def compact(mask):
+        key = jnp.where(mask, pos, B)
+        order = jnp.argsort(key)        # stable: valid entries keep batch order
+        valid = key[order] < B
+        ids_c = jnp.where(valid, ids[order], -1)
+        dest_c = jnp.where(valid, pos[order], -1)
+        return ids_c, dest_c, jnp.sum(mask.astype(jnp.int32))
+
+    miss_ids, miss_dest, n_miss = compact((tier == 2) & is_first)
+    rem_ids, rem_dest, n_rem = compact((tier == 3) & is_first)
+    counts = jnp.stack([n_miss, n_rem])
+    return out, first_idx, miss_ids, miss_dest, rem_ids, rem_dest, counts

@@ -3,9 +3,19 @@
 The device-tier cache lookup is the hottest non-matmul op in the Helios
 data path (paper §3.2: "leverage GPU's massive parallelism to boost cache
 lookup throughput").  On TPU the equivalent is a scalar-prefetch gather:
-row indices are prefetched into SMEM and drive the BlockSpec index_map, so
-each grid step DMAs exactly one cached row block HBM->VMEM — no
-gather-scatter unit needed, the DMA engine does the indirection.
+row indices are prefetched into SMEM and drive the row DMAs, so no
+gather-scatter unit is needed — the DMA engine does the indirection.
+
+Two layouts:
+
+* ``rows_per_step == 1`` — the index drives the BlockSpec index_map
+  directly; each grid step is exactly one row DMA HBM->VMEM.
+* ``rows_per_step > 1`` (default) — the BLOCKED path: ``idx`` is padded to
+  a multiple of ``rows_per_step`` and each grid step issues all of its
+  rows' DMAs back-to-back (start-all then wait-all, one semaphore per
+  row), keeping ``rows_per_step`` copies in flight per step instead of
+  serializing on one.  The table stays in HBM (``memory_space=ANY``); only
+  the requested rows ever land in VMEM.
 """
 from __future__ import annotations
 
@@ -17,36 +27,80 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _gather_kernel(idx_ref, table_ref, out_ref):
-    # table_ref block: (rows_per_step, D) selected by index_map from idx
+    # table_ref block: (1, D) selected by index_map from idx
     out_ref[...] = table_ref[...]
+
+
+def _gather_kernel_blocked(idx_ref, table_ref, out_ref, sems):
+    # table_ref: full (N, D) array left in HBM; out_ref: (r, D) VMEM block.
+    # Start every row copy of this step before waiting on any — the DMA
+    # engine overlaps them (this is what rows_per_step buys).
+    i = pl.program_id(0)
+    r = out_ref.shape[0]
+
+    def row_copy(k):
+        row = idx_ref[i * r + k]
+        return pltpu.make_async_copy(table_ref.at[pl.ds(row, 1)],
+                                     out_ref.at[pl.ds(k, 1)],
+                                     sems.at[k])
+
+    def start(k, _):
+        row_copy(k).start()
+        return 0
+
+    def wait(k, _):
+        row_copy(k).wait()
+        return 0
+
+    jax.lax.fori_loop(0, r, start, 0)
+    jax.lax.fori_loop(0, r, wait, 0)
 
 
 def gather_rows(table: jax.Array, idx: jax.Array, *,
                 rows_per_step: int = 8, interpret: bool = False) -> jax.Array:
     """table: (N, D); idx: (B,) int32 -> (B, D).
 
-    ``idx`` is padded to a multiple of ``rows_per_step``; the scalar-prefetch
-    index_map makes each grid step fetch ``rows_per_step`` rows.  For
-    simplicity each step gathers rows with one DMA per row (block height 1
-    when rows_per_step == 1 keeps the index_map exact; larger steps require
-    idx-sorted locality and are used for the hot-tier where placement is
-    contiguous-by-hotness).
+    ``idx`` is padded to a multiple of ``rows_per_step`` (pad entries fetch
+    row 0 and are sliced off), so any batch size works.  ``rows_per_step``
+    row DMAs are kept in flight per grid step; ``rows_per_step=1`` falls
+    back to the exact one-row-per-step index_map layout.
     """
     B = idx.shape[0]
     D = table.shape[1]
-    grid = (B,)
+    idx = idx.astype(jnp.int32)
 
-    spec_table = pl.BlockSpec((1, D), lambda i, idx_ref: (idx_ref[i], 0))
-    spec_out = pl.BlockSpec((1, D), lambda i, idx_ref: (i, 0))
+    if B == 0:
+        return jnp.zeros((0, D), table.dtype)
 
-    return pl.pallas_call(
-        _gather_kernel,
+    if rows_per_step <= 1:
+        spec_table = pl.BlockSpec((1, D), lambda i, idx_ref: (idx_ref[i], 0))
+        spec_out = pl.BlockSpec((1, D), lambda i, idx_ref: (i, 0))
+        return pl.pallas_call(
+            _gather_kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(B,),
+                in_specs=[spec_table],
+                out_specs=spec_out,
+            ),
+            out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+            interpret=interpret,
+        )(idx, table)
+
+    r = rows_per_step
+    n_steps = -(-B // r)
+    pad = n_steps * r - B
+    idx_p = jnp.pad(idx, (0, pad)) if pad else idx
+    out = pl.pallas_call(
+        _gather_kernel_blocked,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[spec_table],
-            out_specs=spec_out,
+            grid=(n_steps,),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=pl.BlockSpec((r, D), lambda i, idx_ref: (i, 0)),
+            scratch_shapes=[pltpu.SemaphoreType.DMA((r,))],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_steps * r, D), table.dtype),
         interpret=interpret,
-    )(idx.astype(jnp.int32), table)
+    )(idx_p, table)
+    return out[:B] if pad else out

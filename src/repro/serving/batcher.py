@@ -91,7 +91,10 @@ class MicroBatcher:
 
         With ``dedup`` the union id set is gathered exactly once and
         per-request feature matrices are scattered back out of the unique
-        row block; the ablation path gathers per request.  Returns
+        row block; the ablation path gathers per request.  Either way the
+        batch reaches the cache's fused lookup (``ServerConfig.
+        fused_lookup``), which collapses any residual duplicates before
+        the miss list hits the IO engines.  Returns
         ``(feats, n_device, n_host, n_storage, rows_fetched, storage_virt)``
         so the server can do virtual-time and dedup accounting; misses
         count BOTH un-cached tiers (local storage and remote peers) and

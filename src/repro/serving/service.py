@@ -49,6 +49,8 @@ class ServerConfig:
     fanouts: tuple = (10, 5)
     mode: str = "helios"               # helios | gids | cpu
     dedup: bool = True                 # cross-request node dedup
+    fused_lookup: bool = True          # fused plan+dedup+tier-split cache
+                                       # lookup (PR 7); False = host plan()
     device_cache_frac: float = 0.05
     host_cache_frac: float = 0.10
     io_worker_budget: float = 0.3
@@ -104,7 +106,8 @@ class GNNInferenceServer:
                              hysteresis=cfg.policy_hysteresis)
         self.cache = HeteroCache(store, None, dev_rows, host_rows, self.io,
                                  policy=policy,
-                                 write_policy=cfg.write_policy)
+                                 write_policy=cfg.write_policy,
+                                 fused=cfg.fused_lookup)
 
         # --- model + single compiled forward step ------------------------
         if params is None:

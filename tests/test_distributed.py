@@ -250,6 +250,50 @@ def test_momentum_table_read_your_writes(tmp_path):
     mom_cache.close()
 
 
+def test_adam_second_moment_table(tmp_path):
+    """Adam second-moment rows live in a THIRD mutable table on the same
+    write path; the update is -lr * v / (sqrt(vhat) + eps) with global-step
+    bias correction (lazy sparse Adam)."""
+    from repro.gnn.train import TrainableEmbeddingTable
+    emb_store = FeatureStore(str(tmp_path / "emb"), N_ROWS, ROW_DIM,
+                             n_shards=2, create=True, rng_seed=1,
+                             writable=True)
+    mom_store = FeatureStore(str(tmp_path / "mom"), N_ROWS, ROW_DIM,
+                             n_shards=2, create=True, writable=True)
+    v2_store = FeatureStore(str(tmp_path / "v2"), N_ROWS, ROW_DIM,
+                            n_shards=2, create=True, writable=True)
+    emb_cache = HeteroCache(emb_store, np.zeros(N_ROWS), 4, 8)
+    mom_cache = HeteroCache(mom_store, np.zeros(N_ROWS), 0, 8)
+    v2_cache = HeteroCache(v2_store, np.zeros(N_ROWS), 0, 8)
+    lr, mu, b2, eps = 0.1, 0.9, 0.99, 1e-8
+    table = TrainableEmbeddingTable(emb_cache, lr, mom_cache, mu,
+                                    v2_cache, b2, eps)
+    ids = np.array([1, 5, 250])
+    base = emb_cache.gather(ids).copy()
+    g1 = np.ones((3, ROW_DIM), np.float32)
+    table.apply_grads(ids, g1)
+    m2 = (1 - b2) * g1 ** 2
+    step1 = base - lr * g1 / (np.sqrt(m2 / (1 - b2)) + eps)
+    np.testing.assert_allclose(v2_cache.gather(ids), m2, rtol=1e-6)
+    np.testing.assert_allclose(emb_cache.gather(ids), step1, rtol=1e-5)
+    g2 = np.full((3, ROW_DIM), 2.0, np.float32)
+    table.apply_grads(ids, g2)
+    v = mu * g1 + g2
+    m2b = b2 * m2 + (1 - b2) * g2 ** 2
+    np.testing.assert_allclose(v2_cache.gather(ids), m2b, rtol=1e-6)
+    np.testing.assert_allclose(
+        emb_cache.gather(ids),
+        step1 - lr * v / (np.sqrt(m2b / (1 - b2 ** 2)) + eps), rtol=1e-5)
+    # all three mutable tables flush durable
+    for c, st_, want in ((emb_cache, emb_store, None),
+                         (mom_cache, mom_store, v),
+                         (v2_cache, v2_store, m2b)):
+        c.flush()
+        if want is not None:
+            np.testing.assert_allclose(st_.read_rows(ids), want, rtol=1e-6)
+        c.close()
+
+
 # ---------------------------------------------------------------------------
 # serving fleet
 # ---------------------------------------------------------------------------

@@ -23,6 +23,22 @@ def test_gather_sweep(n, d, b, dtype):
                                np.asarray(ref, np.float32))
 
 
+@pytest.mark.parametrize("b", [1, 7, 8, 33, 64])
+@pytest.mark.parametrize("rows_per_step", [1, 4, 8, 16])
+def test_gather_blocked_rows_per_step(b, rows_per_step):
+    """The blocked path pads idx to a multiple of rows_per_step and keeps
+    that many row DMAs in flight per grid step; any (B, r) combo must
+    match the one-row-per-step layout bit for bit."""
+    from repro.kernels.gather.gather import gather_rows
+    key = jax.random.key(b)
+    table = jax.random.normal(key, (300, 24), jnp.float32)
+    idx = jax.random.randint(jax.random.key(rows_per_step), (b,), 0, 300)
+    got = gather_rows(table, idx, rows_per_step=rows_per_step,
+                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(table)[np.asarray(idx)])
+
+
 @pytest.mark.parametrize("e,d,s", [(100, 32, 8), (256, 64, 16), (513, 128, 32),
                                    (64, 16, 64)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -749,6 +749,32 @@ def test_trainer_embedding_writeback(tmp_path):
         OutOfCoreGNNTrainer(g, ro, cfg)
 
 
+def test_trainer_adam_table_rides_flush_barriers(tmp_path):
+    """embedding_adam > 0 spins up the second-moment table; it flushes at
+    the same barriers as the momentum table and drains at epoch end."""
+    from repro.gnn.graph import synth_graph
+    from repro.gnn.train import OutOfCoreGNNTrainer, TrainerConfig
+    g = synth_graph(800, 6, skew=1.0, seed=0)
+    store = FeatureStore(str(tmp_path / "f"), n_rows=800, row_dim=8,
+                         n_shards=3, create=True, rng_seed=1, writable=True)
+    cfg = TrainerConfig(mode="helios-nopipe", batch_size=32, fanouts=(3, 2),
+                        hidden=8, presample_batches=2, train_embeddings=True,
+                        embedding_lr=0.5, embedding_flush_every=2,
+                        embedding_momentum=0.9, embedding_adam=0.99)
+    with OutOfCoreGNNTrainer(g, store, cfg) as tr:
+        out = tr.train(3)
+    for table in ("momentum", "adam"):
+        wb = out["writeback"][table]
+        assert wb["written_rows"] > 0
+        assert wb["flushes"] > 0
+        assert wb["dirty_after_flush"] == 0
+    # the second moment is nonnegative by construction and nonzero where
+    # gradients landed
+    v2 = FeatureStore(str(tmp_path / "f_adam"), n_rows=800, row_dim=8,
+                      n_shards=3).read_rows(np.arange(800))
+    assert v2.min() >= 0.0 and (v2 > 0).any()
+
+
 # ---------------------------------------------------------------------------
 # sharded embedding checkpoints stream through submit_write
 # ---------------------------------------------------------------------------
