@@ -63,6 +63,27 @@ GATES = {
         # degraded owner-storage reroute actually used
         ("scale_out/fleet/deadpeer", "reroute_ok", "==", 1.0),
     ],
+    "chaos": [
+        # fault transparency at engine scope: 2% transient read errors +
+        # a stuck-shard window must leave every gathered byte identical
+        # to fault-free, with the recovery visible in IOStats and
+        # virtual throughput within 0.7x of the clean run
+        ("chaos/engine/summary", "identical_ok", "==", 1.0),
+        ("chaos/engine/summary", "retries_ok", "==", 1.0),
+        ("chaos/engine/summary", "x_chaos_vs_clean", ">=", 0.7),
+        # the same bar end-to-end: a training epoch under 5% transient
+        # read errors keeps a bit-identical loss trace (retried reads
+        # return the same bytes, so faults cannot perturb the math)
+        ("chaos/epoch/summary", "identical_ok", "==", 1.0),
+        ("chaos/epoch/summary", "retries_ok", "==", 1.0),
+        ("chaos/epoch/summary", "x_chaos_vs_clean", ">=", 0.7),
+        # unrecoverable faults escalate with partial-completion
+        # accounting instead of hanging the ticket
+        ("chaos/fatal/summary", "fatal_ok", "==", 1.0),
+        # a peer stuck past the deadline is hedged to owner storage,
+        # bytes still identical
+        ("chaos/hedge/summary", "hedge_ok", "==", 1.0),
+    ],
 }
 
 _OPS = {

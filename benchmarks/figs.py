@@ -778,6 +778,122 @@ def scale_out():
          f"modes_identical={float(same):.1f}")
 
 
+def chaos():
+    """Fault tolerance: injected faults must stay invisible to training.
+
+    (a) engine — identical skewed gather streams through a clean striped
+        engine and one with 2% injected transient read errors plus a
+        stuck-shard window behind a virtual-time deadline: every byte
+        bit-identical to fault-free, retries visible in ``IOStats``, and
+        chaos virtual throughput >= 0.7x clean (gates ``identical_ok``,
+        ``retries_ok``, ``x_chaos_vs_clean``).
+    (b) epoch — a full helios-nopipe training epoch clean vs 5% transient
+        read errors: the loss trace is bit-identical (retried reads return
+        the same bytes, so faults cannot perturb the math), retries land
+        in the trainer's IO report, virtual throughput >= 0.7x fault-free
+        (same three gates at epoch scope).
+    (c) fatal — an unrecoverable fault escalates as ``FatalIOError`` with
+        partial-completion accounting (completed/failed shard counts)
+        instead of hanging the ticket (gate ``fatal_ok``).
+    (d) hedge — a remote peer stuck past the deadline: hedged reads
+        reroute its shards to owner storage with bytes still identical
+        (gate ``hedge_ok``).
+    """
+    from repro.distributed.partition import (PartitionedFeatureStore,
+                                             make_partition)
+    from repro.distributed.remote_engine import RemoteIOEngine
+    from repro.ft.chaos import ChaosSchedule, FatalIOError, RetryPolicy
+
+    rng = np.random.default_rng(3)
+    n_b, batch = (24, 1024) if SMOKE else (48, 2048)
+    store = _store(256, n_shards=8, tag="chaos")
+    p = 1.0 / (np.arange(N_V) + 1.0) ** 1.1
+    p /= p.sum()
+    batches = [rng.choice(N_V, batch, p=p) for _ in range(n_b)]
+
+    # --- (a) engine: clean vs chaos, bit-identical bytes -----------------
+    eng = AsyncIOEngine(store, chaos=None)
+    want, clean_virt = [], 0.0
+    for b in batches:
+        d, v = eng.submit(b).wait()
+        want.append(d)
+        clean_virt += v
+    eng.close()
+    ch = ChaosSchedule(seed=7, read_error_rate=0.02, stuck=((3, 2, 4),))
+    rp = RetryPolicy(deadline_s=5e-4, backoff_base_s=2e-5)
+    eng = AsyncIOEngine(store, chaos=ch, retry=rp)
+    same, chaos_virt = True, 0.0
+    for b, w in zip(batches, want):
+        d, v = eng.submit(b).wait()
+        same &= bool((d == w).all())
+        chaos_virt += v
+    st = eng.stats
+    eng.close()
+    x_eng = clean_virt / chaos_virt
+    emit("chaos/engine/clean", clean_virt / n_b * 1e6,
+         f"virt_ms={clean_virt * 1e3:.2f}")
+    emit("chaos/engine/chaos", chaos_virt / n_b * 1e6,
+         f"retries={st.retries};timeouts={st.timeouts};"
+         f"transient={st.transient_errors};"
+         f"backoff_ms={st.virtual_backoff_s * 1e3:.2f}")
+    emit("chaos/engine/summary", 0.0,
+         f"identical_ok={float(same):.1f};"
+         f"retries_ok={float(st.retries > 0):.1f};"
+         f"x_chaos_vs_clean={x_eng:.2f}")
+
+    # --- (b) epoch: faults must not perturb the training math ------------
+    g = _graph()
+    clean = _run(g, store, "helios-nopipe", n_batches=8, chaos=None)
+    chz = _run(g, store, "helios-nopipe", n_batches=8,
+               chaos=ChaosSchedule(seed=7, read_error_rate=0.05),
+               io_backoff_s=2e-5)
+    ep_same = (clean["loss_first"] == chz["loss_first"]
+               and clean["loss_last"] == chz["loss_last"])
+    x_ep = clean["virtual_per_batch_s"] / chz["virtual_per_batch_s"]
+    emit("chaos/epoch/clean", clean["virtual_per_batch_s"] * 1e6,
+         f"loss_last={clean['loss_last']:.6f}")
+    emit("chaos/epoch/chaos", chz["virtual_per_batch_s"] * 1e6,
+         f"retries={chz['io']['retries']};"
+         f"transient={chz['io']['transient_errors']};"
+         f"backoff_ms={chz['io']['virtual_backoff_s'] * 1e3:.2f}")
+    emit("chaos/epoch/summary", 0.0,
+         f"identical_ok={float(ep_same):.1f};"
+         f"retries_ok={float(chz['io']['retries'] > 0):.1f};"
+         f"x_chaos_vs_clean={x_ep:.2f}")
+
+    # --- (c) fatal: clean escalation, never a hang -----------------------
+    eng = AsyncIOEngine(store,
+                        chaos=ChaosSchedule(seed=0, fatal_at=((1, 0),)))
+    try:
+        eng.submit(np.arange(4096)).wait()
+        fatal_ok = 0.0
+    except FatalIOError as e:
+        fatal_ok = float(e.failed_shards == 1 and e.completed_shards == 7)
+    eng.close()
+    emit("chaos/fatal/summary", 0.0, f"fatal_ok={fatal_ok:.1f}")
+
+    # --- (d) hedge: stuck peer rerouted to owner storage -----------------
+    ps = PartitionedFeatureStore(
+        os.path.join(ROOT, "chaos_fleet"), N_V, 128,
+        make_partition("hash", N_V, 4), n_shards=2, create=True,
+        rng_seed=3)
+    # fixed batch size: the deadline must sit between the healthy remote
+    # service time and the stuck window, and the hedged owner-storage
+    # reroute (degraded QD) must itself fit under it
+    hb = [rng.integers(0, N_V, 1024) for _ in range(4)]
+    with RemoteIOEngine(ps, me=0, chaos=None) as eng:
+        hwant = [eng.submit(b).wait()[0] for b in hb]
+    hch = ChaosSchedule(seed=11, stuck=((2, 0, 10 ** 9),))
+    with RemoteIOEngine(ps, me=0, chaos=hch,
+                        retry=RetryPolicy(deadline_s=2e-3)) as eng:
+        h_same = all(bool((eng.submit(b).wait()[0] == w).all())
+                     for b, w in zip(hb, hwant))
+        hedged, rerouted = eng.stats.hedged_reads, eng.rerouted_batches
+    emit("chaos/hedge/summary", 0.0,
+         f"hedge_ok={float(h_same and hedged > 0 and rerouted > 0):.1f};"
+         f"hedged={hedged};rerouted={rerouted}")
+
+
 def table1_datasets():
     """Table 1 sanity: registered dataset characteristics."""
     for name, d in DATASETS.items():
@@ -788,4 +904,4 @@ def table1_datasets():
 
 ALL = [table1_datasets, fig7_iostack, fig5_end_to_end, fig6_inmem,
        fig8_cpu_cache_ssds, fig9_cpu_cache_dims, fig10_gpu_cache,
-       fig11_pipeline, serve_slo, cache_policy, io_path, scale_out]
+       fig11_pipeline, serve_slo, cache_policy, io_path, scale_out, chaos]

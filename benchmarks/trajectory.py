@@ -85,7 +85,8 @@ def write(bench: str, mode: str, json_path: str, baseline_path: str) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", required=True,
-                    choices=("io_path", "cache_policy", "scale_out"))
+                    choices=("io_path", "cache_policy", "scale_out",
+                             "chaos"))
     ap.add_argument("--mode", required=True, choices=("smoke", "full"))
     ap.add_argument("--json", required=True, dest="json_path",
                     help="fresh benchmark --json dump")

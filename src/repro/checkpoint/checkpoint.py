@@ -236,7 +236,8 @@ class CheckpointManager:
     def save_embeddings(self, step: int, store, chunk_rows: int = 65536,
                         extra: dict | None = None, striped: bool = True,
                         coalesce_gap=8, versions: np.ndarray | None = None,
-                        base_step: int | None = None) -> dict:
+                        base_step: int | None = None,
+                        skip_shards=None) -> dict:
         """Checkpoint a (flushed) embedding ``FeatureStore`` as a sharded
         table: rows stream in chunks through a striped ``submit_write``
         engine into a stage-dir FeatureStore with identical geometry, the
@@ -251,7 +252,14 @@ class CheckpointManager:
         (chains flatten — a delta of a delta references the original
         holder directly).  ``base_step`` picks the base (default: latest
         embedding checkpoint); a base without fingerprints forces a full
-        save."""
+        save.
+
+        DEGRADED-MODE DEFERRAL: ``skip_shards`` (e.g. the engine's
+        ``degraded_shards()``) suspends checkpoint traffic to failing
+        shards — a skipped shard the base already holds is referenced
+        delta-style at its stale bytes and listed under
+        ``shards_deferred`` in the manifest; a skipped shard with no
+        base copy is still written (there is nothing to defer to)."""
         from repro.core.iostack import AsyncIOEngine, FeatureStore
         stage = os.path.join(self.dir, f".stage_emb_{step}")
         final = os.path.join(self.dir, f"emb_{step:010d}")
@@ -271,6 +279,12 @@ class CheckpointManager:
         changed = (list(range(n_shards)) if base is None else
                    [s for s in range(n_shards)
                     if fp[str(s)] != base["version_fp"].get(str(s))])
+        deferred = []
+        if skip_shards is not None and base is not None:
+            skip = {int(s) for s in np.asarray(skip_shards).ravel()}
+            deferred = sorted(s for s in changed
+                              if s in skip and str(s) in base["shards"])
+            changed = [s for s in changed if s not in deferred]
         shutil.rmtree(stage, ignore_errors=True)
         os.makedirs(stage)
         dest = FeatureStore(os.path.join(stage, "table"), store.n_rows,
@@ -309,6 +323,7 @@ class CheckpointManager:
                                  "n_shards": n_shards},
                     "shards": shards, "virtual_write_s": virt,
                     "shards_written": len(changed),
+                    "shards_deferred": deferred,
                     "extra": extra or {}, "time": time.time()}
         if fp is not None:
             manifest["version_fp"] = fp
@@ -331,17 +346,50 @@ class CheckpointManager:
 
     def restore_embeddings(self, store, step: int | None = None,
                            chunk_rows: int = 65536, verify: bool = True,
-                           striped: bool = True, coalesce_gap=8) -> dict:
+                           striped: bool = True, coalesce_gap=8,
+                           fallback: bool = True) -> dict:
         """Stream a sharded embedding checkpoint back into the LIVE
         (writable) ``store`` through ``submit_write``; per-shard CRCs are
         verified before a single row lands.  Delta manifests resolve each
         shard to the step that actually holds its bytes (mixed base+delta
         restore), so a chain of incremental checkpoints reconstructs the
-        full table from exactly ``n_shards`` files."""
-        from repro.core.iostack import AsyncIOEngine, CompletionQueue
-        step = step if step is not None else self.latest_embedding_step()
-        if step is None:
+        full table from exactly ``n_shards`` files.
+
+        With ``fallback`` (default), a CORRUPT candidate — torn/bit-
+        flipped shard bytes failing their CRC, a missing referenced file,
+        an unparseable manifest — is skipped and the next-newest
+        embedding step tried, walking the chain until one restores
+        intact; the result reports ``restored_step`` and a ``skipped``
+        list of what was passed over and why.  Geometry mismatches still
+        raise: the caller brought the wrong store, no older checkpoint
+        fixes that."""
+        want = step if step is not None else self.latest_embedding_step()
+        if want is None:
             raise FileNotFoundError("no embedding checkpoint found")
+        candidates = [s for s in reversed(self.all_embedding_steps())
+                      if s <= want]
+        if not fallback:
+            candidates = candidates[:1]
+        if not candidates or candidates[0] != want:
+            raise FileNotFoundError(f"embedding checkpoint {want} not found")
+        skipped = []
+        for cand in candidates:
+            try:
+                out = self._restore_embeddings_one(
+                    store, cand, chunk_rows, verify, striped, coalesce_gap)
+            except (IOError, OSError, KeyError,
+                    json.JSONDecodeError) as e:
+                skipped.append({"step": cand, "error": str(e)})
+                continue
+            return out | {"restored_step": cand, "skipped": skipped}
+        raise IOError("no intact embedding checkpoint; skipped: "
+                      + "; ".join(f"step {s['step']}: {s['error']}"
+                                  for s in skipped))
+
+    def _restore_embeddings_one(self, store, step: int, chunk_rows: int,
+                                verify: bool, striped: bool,
+                                coalesce_gap) -> dict:
+        from repro.core.iostack import AsyncIOEngine, CompletionQueue
         d = os.path.join(self.dir, f"emb_{step:010d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)

@@ -42,8 +42,9 @@ from repro.core.policy import (CachePolicy, StaticPresamplePolicy,
 from repro.core.simulator import (DEFAULT_ENVELOPE, HardwareEnvelope,
                                   dram_gather_time, hbm_gather_time,
                                   pcie_time)
-from repro.core.writeback import (FlushResult, MutableTierTable,
-                                  WriteCombiner, WriteResult)
+from repro.core.writeback import (FlushJournal, FlushResult,
+                                  MutableTierTable, WriteCombiner,
+                                  WriteResult)
 
 
 @dataclass
@@ -76,6 +77,9 @@ class CacheStats:
     flushed_rows: int = 0               # dirty rows written back (incl. demote)
     virtual_write_s: float = 0.0        # write-through ticket time
     virtual_flush_s: float = 0.0        # flush + flush-on-demote ticket time
+    # graceful degradation: prefetch rows suppressed because their shard
+    # is marked degraded by the engine (demand gathers still serve them)
+    degraded_skipped_rows: int = 0
 
     @property
     def hit_rate(self):
@@ -280,7 +284,8 @@ class HeteroCache:
                  write_combine_rows: int = 0,
                  remote_mask: np.ndarray | None = None,
                  fused: bool = True,
-                 fused_backend: str | None = None):
+                 fused_backend: str | None = None,
+                 journal: bool = True):
         if write_policy not in ("writeback", "writethrough"):
             raise ValueError(f"unknown write_policy {write_policy!r} "
                              "(expected writeback | writethrough)")
@@ -321,6 +326,16 @@ class HeteroCache:
         # completes these before it may declare storage durable
         self._inflight: list = []
         self._wr_lock = threading.Lock()
+        # crash-consistent flush: a write-intent journal brackets every
+        # flush barrier; a pending entry found here means the previous
+        # process died mid-flush, so replay it BEFORE any tier loads read
+        # (possibly torn) storage below
+        self._journal = (FlushJournal(store.path)
+                         if journal and store.writable
+                         and hasattr(store, "path") else None)
+        self.journal_recovery = {"action": "none"}
+        if self._journal is not None:
+            self.journal_recovery = self._journal.recover(store)
         self._owns_engine = io_engine is None
         self.io = io_engine or AsyncIOEngine(store, env=env)
         # fourth tier: rows whose un-cached home is a PEER's store (loc 3).
@@ -862,6 +877,12 @@ class HeteroCache:
                         rows[:len(wc_ids)] = wc_rows
                     if len(resident):
                         rows[len(wc_ids):] = self._resident_values(resident)
+                    if self._journal is not None:
+                        # durable write intent BEFORE the first shard
+                        # write can tear: a crash anywhere in the
+                        # submit->msync window replays this barrier on
+                        # the next open
+                        self._journal.record(ids, rows)
                     pf = self._write_back_submit(ids, rows, tag="flush")
             return PendingEpochFlush(pf, len(ids),
                                      len(ids) * self.store.row_bytes)
@@ -886,6 +907,9 @@ class HeteroCache:
         # write-through rows landed in the memmaps without an msync,
         # and the barrier is what makes THEM crash-safe too
         self.store.flush()
+        if self._journal is not None:
+            # every journalled row is durable: retire the write intent
+            self._journal.commit()
         with self._stats_lock:
             self.stats.flushes += 1
         return FlushResult(ef.rows, ef.bytes, virt)
@@ -1107,6 +1131,20 @@ class HeteroCache:
                 # write-back: a storage prefetch racing that write could
                 # admit pre-write bytes, so they are not prefetchable
                 ids = ids[~self.mut.is_dirty(ids)]
+            deg = getattr(self.io, "degraded_shards", None)
+            if deg is not None and len(ids):
+                # graceful degradation: optional traffic (prefetch) to a
+                # repeatedly-failing shard is suspended — demand gathers
+                # keep serving it with retries, and the suppression is
+                # stats-visible instead of raising
+                d = deg()
+                if len(d):
+                    drop = np.isin(self.io.shard_of(ids), d)
+                    if drop.any():
+                        with self._stats_lock:
+                            self.stats.degraded_skipped_rows += \
+                                int(drop.sum())
+                        ids = ids[~drop]
             _, first = np.unique(ids, return_index=True)
             ids = ids[np.sort(first)]               # dedupe, keep ranking
             tier = ("host" if self.host_rows

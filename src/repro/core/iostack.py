@@ -38,6 +38,13 @@ import numpy as np
 
 from repro.core.simulator import (ArrayModel, DEFAULT_ENVELOPE,
                                   HardwareEnvelope, SSDModel)
+from repro.ft.chaos import (ChaosSchedule, DEFAULT_RETRY, FatalIOError,
+                            RetryPolicy, serve_with_recovery)
+
+# write-intent journal the flush barrier parks in the store directory
+# (see writeback.FlushJournal); named here because FeatureStore owns the
+# directory layout and must drop a stale journal when re-creating
+JOURNAL_FILE = "flush.journal"
 
 
 # ---------------------------------------------------------------------------
@@ -82,6 +89,13 @@ class FeatureStore:
                 raise ValueError(
                     f"feature store at {path} has layout {tag!r}, expected "
                     f"{self._layout_tag()!r}; recreate it with create=True")
+        if create:
+            # a freshly-created store must not inherit a crashed
+            # predecessor's write-intent journal: replaying it would
+            # scribble stale rows over the new table
+            j = os.path.join(path, JOURNAL_FILE)
+            if os.path.exists(j):
+                os.remove(j)
         self.shards = []
         for s in range(n_shards):
             n_local = len(range(s, n_rows, n_shards))
@@ -274,6 +288,14 @@ class IOStats:
     write_shard_batches: int = 0
     write_ranges: int = 0               # sequential range writes issued
     write_span_bytes: int = 0           # bytes streamed incl. coalesce waste
+    # fault-recovery accounting (ChaosSchedule/RetryPolicy paths)
+    retries: int = 0                    # failed service attempts retried
+    timeouts: int = 0                   # of which: deadline-abandoned
+    transient_errors: int = 0           # of which: transient faults
+    fatal_errors: int = 0               # ops surfaced fatal on a ticket
+    virtual_backoff_s: float = 0.0      # virtual seconds spent backing off
+    hedged_reads: int = 0               # peer batches rerouted post-timeout
+    degraded_events: int = 0            # streams newly marked degraded
 
     def bw(self) -> float:
         return self.bytes / self.virtual_io_s if self.virtual_io_s else 0.0
@@ -343,10 +365,18 @@ class _ShardedCompletion:
     over its per-shard service times (bounded below by the PCIe crossing of
     everything streamed); stats land exactly once, when the last shard
     completes and before the ticket's future resolves.
+
+    PARTIAL-TICKET COMPLETION: a shard that fails (fatal-taxonomy CQE)
+    doesn't void the others — every remaining shard still services, its
+    data lands in the caller's buffer and its virtual time/ranges are
+    booked, and only then does the ticket resolve with the first
+    exception, annotated with ``completed_shards``/``failed_shards`` so
+    callers can see the partial extent.
     """
 
     __slots__ = ("engine", "fut", "data", "pending", "max_virt", "ranges",
-                 "span_bytes", "wall", "failed", "kind", "_lk")
+                 "span_bytes", "wall", "exc", "done_shards",
+                 "failed_shards", "kind", "_lk")
 
     def __init__(self, engine, fut: Future, data, pending: int,
                  kind: str = "r"):
@@ -358,7 +388,9 @@ class _ShardedCompletion:
         self.ranges = 0
         self.span_bytes = 0
         self.wall = 0.0
-        self.failed = False
+        self.exc: BaseException | None = None
+        self.done_shards = 0
+        self.failed_shards = 0
         self.kind = kind                # "r" read | "w" write
         self._lk = threading.Lock()
 
@@ -369,18 +401,21 @@ class _ShardedCompletion:
             self.ranges += n_ranges
             self.span_bytes += span_bytes
             self.wall += wall
+            self.done_shards += 1
             self.pending -= 1
-            last = self.pending == 0 and not self.failed
+            last = self.pending == 0
         if last:
             self._finalize()
 
     def shard_fail(self, exc: BaseException):
         with self._lk:
-            first = not self.failed
-            self.failed = True
+            if self.exc is None:        # first failure names the ticket
+                self.exc = exc
+            self.failed_shards += 1
             self.pending -= 1
-        if first:
-            self.fut.set_exception(exc)
+            last = self.pending == 0
+        if last:
+            self._finalize()
 
     def _finalize(self):
         eng = self.engine
@@ -396,7 +431,74 @@ class _ShardedCompletion:
                 eng.stats.wall_complete_s += self.wall
                 eng.stats.ranges += self.ranges
                 eng.stats.span_bytes += self.span_bytes
-        self.fut.set_result((self.data, virt))
+        if self.exc is not None:
+            self.exc.completed_shards = self.done_shards
+            self.exc.failed_shards = self.failed_shards
+            self.fut.set_exception(self.exc)
+        else:
+            self.fut.set_result((self.data, virt))
+
+
+def _recover_op(eng, stream: int, kind: str, time_fn, io_fn,
+                hedge: bool = False):
+    """One engine service op under the engine's fault schedule + retry
+    policy, with retry/backoff/degradation accounting booked into the
+    engine's ``IOStats``.  With no chaos and no deadline this is the
+    zero-overhead clean path.  Returns ``(virt, payload, counters)``;
+    fatal-taxonomy faults book ``fatal_errors`` and re-raise.
+
+    Degradation tracking: every failed attempt grows the stream's
+    consecutive-failure streak, a clean (retry-free) op resets it, and a
+    streak crossing ``eng.degrade_after`` marks the stream degraded
+    (``eng.degraded_shards()``) until it recovers — what the cache uses
+    to suspend prefetch/checkpoint traffic to a misbehaving shard.
+    """
+    if eng.chaos is None and eng.retry.deadline_s is None:
+        payload = io_fn(None)
+        return time_fn(0, False), payload, None
+
+    def next_seq():
+        with eng._lock:
+            v = eng._chaos_seq[stream]
+            eng._chaos_seq[stream] = v + 1
+            return v
+
+    def bump_streak(n: int):
+        was = eng._fail_streak[stream] >= eng.degrade_after
+        eng._fail_streak[stream] += n
+        if not was and eng._fail_streak[stream] >= eng.degrade_after:
+            eng.stats.degraded_events += 1
+
+    try:
+        payload, virt, rec = serve_with_recovery(
+            eng._fault, eng.retry, stream, kind, next_seq, time_fn,
+            io_fn, hedge=hedge,
+            jitter_seed=eng.chaos.seed if eng.chaos is not None else 0)
+    except FatalIOError as e:
+        rec = getattr(e, "recovery", None)
+        with eng._lock:
+            st = eng.stats
+            st.fatal_errors += 1
+            if rec is not None:
+                st.retries += rec.retries
+                st.timeouts += rec.timeouts
+                st.transient_errors += rec.transient
+                st.virtual_backoff_s += rec.backoff_s
+            bump_streak((rec.retries if rec is not None else 0) + 1)
+        raise
+    with eng._lock:
+        st = eng.stats
+        if rec.retries:
+            st.retries += rec.retries
+            st.timeouts += rec.timeouts
+            st.transient_errors += rec.transient
+            st.virtual_backoff_s += rec.backoff_s
+            bump_streak(rec.retries)
+        else:
+            eng._fail_streak[stream] = 0
+        if rec.hedged:
+            st.hedged_reads += 1
+    return virt, payload, rec
 
 
 class AsyncIOEngine:
@@ -424,7 +526,10 @@ class AsyncIOEngine:
                  total_workers: int = 8,
                  env: HardwareEnvelope = DEFAULT_ENVELOPE,
                  striped: bool = True, coalesce_gap: int | str = 8,
-                 max_coalesce_gap: int = 64, amp_cap: float = 1.5):
+                 max_coalesce_gap: int = 64, amp_cap: float = 1.5,
+                 chaos: ChaosSchedule | None | str = "env",
+                 retry: RetryPolicy | None = None,
+                 degrade_after: int = 3):
         self.store = store
         self.env = env
         self.model = ArrayModel(store.n_shards, env)
@@ -439,7 +544,22 @@ class AsyncIOEngine:
         self.coalesce_gap = 0 if self.adaptive_gap else int(coalesce_gap)
         self.max_coalesce_gap = max_coalesce_gap
         self.amp_cap = amp_cap
-        self._ssd = SSDModel(env)
+        # fault injection + bounded-retry recovery: ``chaos="env"`` picks
+        # up HELIOS_CHAOS (how the CI chaos leg faults every engine in
+        # the e2e suite), None disables injection explicitly
+        self.chaos = ChaosSchedule.from_env() if chaos == "env" else chaos
+        self.retry = retry if retry is not None else DEFAULT_RETRY
+        self.degrade_after = degrade_after
+        # per-stream service-attempt counters (chaos determinism) and
+        # consecutive-failure streaks (degraded-shard marking); the
+        # legacy whole-batch path consults stream 0
+        self._chaos_seq = [0] * store.n_shards
+        self._fail_streak = [0] * store.n_shards
+        # exceptions raised OUTSIDE a service call (ticket aggregation,
+        # CQ reap): never silently lost with the worker thread
+        self.worker_errors: list = []
+        self._ssd = SSDModel(env, chaos=self.chaos)
+        self._fault = self._ssd.fault
         self._sq: queue.Queue = queue.Queue()       # legacy whole-batch queue
         # legacy path: one service lock so the whole-batch FIFO stays a
         # genuinely serial stream even with several workers alive — the
@@ -592,19 +712,27 @@ class AsyncIOEngine:
         mm = self.store.shards[shard]
         order, bounds = coalesce_offsets(offs, self._gap_for(offs))
         so, sd = offs[order], dest[order]
-        span_rows = 0
-        for lo, hi in zip(bounds[:-1], bounds[1:]):
-            start, end = int(so[lo]), int(so[hi - 1]) + 1
-            block = mm[start:end]       # sequential slice, not fancy-index
-            buf[sd[lo:hi]] = block[so[lo:hi] - start]
-            span_rows += end - start
+        spans = [(int(so[lo]), int(so[hi - 1]) + 1, lo, hi)
+                 for lo, hi in zip(bounds[:-1], bounds[1:])]
         n_ranges = len(bounds) - 1
+        span_rows = sum(end - start for start, end, _, _ in spans)
         span_bytes = span_rows * self.store.row_bytes
         # per-SSD queue depth under the worker budget (32 blocks ~ 30% of
         # cores keep ~256 commands in flight per device; below that the
         # device starves — paper Fig. 7)
         qd = int(256 * min(1.0, self.worker_budget / 0.3))
-        virt = self._ssd.range_io_time(n_ranges, span_bytes, qd)
+
+        def time_fn(attempt, hedged):
+            return self._ssd.range_io_time(n_ranges, span_bytes, qd)
+
+        def io_fn(fd):
+            # runs once, on the successful attempt: retried reads return
+            # bit-identical bytes no matter how many attempts failed
+            for start, end, lo, hi in spans:
+                block = mm[start:end]   # sequential slice, not fancy-index
+                buf[sd[lo:hi]] = block[so[lo:hi] - start]
+
+        virt, _, _ = _recover_op(self, shard, "r", time_fn, io_fn)
         return virt, n_ranges, span_bytes
 
     # -- per-shard service: sorted, range-coalesced sequential WRITES -----
@@ -619,15 +747,26 @@ class AsyncIOEngine:
         mm = self.store.shards[shard]
         order, bounds = coalesce_offsets(offs, self._gap_for(offs))
         so, sr = offs[order], rows[order]
-        span_rows = 0
-        for lo, hi in zip(bounds[:-1], bounds[1:]):
-            start, end = int(so[lo]), int(so[hi - 1]) + 1
-            mm[so[lo:hi]] = sr[lo:hi]   # offsets unique post-dedupe
-            span_rows += end - start
+        span_rows = sum(int(so[hi - 1]) + 1 - int(so[lo])
+                        for lo, hi in zip(bounds[:-1], bounds[1:]))
         n_ranges = len(bounds) - 1
         span_bytes = span_rows * self.store.row_bytes
         qd = int(256 * min(1.0, self.worker_budget / 0.3))
-        virt = self._ssd.range_write_time(n_ranges, span_bytes, qd)
+
+        def time_fn(attempt, hedged):
+            return self._ssd.range_write_time(n_ranges, span_bytes, qd)
+
+        def io_fn(fd):
+            if fd is not None and fd.torn:
+                # torn write: only a prefix of the sorted stream programs
+                # before the simulated crash — what the flush journal's
+                # replay-or-discard recovery exists for
+                k = len(so) // 2
+                mm[so[:k]] = sr[:k]
+                return
+            mm[so] = sr                 # offsets unique post-dedupe
+
+        virt, _, _ = _recover_op(self, shard, "w", time_fn, io_fn)
         return virt, n_ranges, span_bytes
 
     # -- completion handling (worker pool = the paper's CQ-polling kernel) -
@@ -676,14 +815,23 @@ class AsyncIOEngine:
                         out = self._service_shard(s, offs, d, buf)
                     self._cqs[s].put((comp, (*out,
                                              time.perf_counter() - t0)))
-                except Exception as e:  # pragma: no cover
+                except Exception as e:
+                    # errored CQE: the owning ticket gets the exception
+                    # (via shard_fail) and the worker stays alive to
+                    # service the next SQE batch — a service fault must
+                    # never kill the thread silently
                     self._cqs[s].put((comp, e))
             finally:
                 self._shard_lk[s].release()
-                # the CQE is reaped OUTSIDE the shard lock: ticket
-                # aggregation (and future resolution callbacks) never
-                # block the next SQE batch of this shard from starting
-                self._reap_cq(s)
+                try:
+                    # the CQE is reaped OUTSIDE the shard lock: ticket
+                    # aggregation (and future resolution callbacks) never
+                    # block the next SQE batch of this shard from starting
+                    self._reap_cq(s)
+                except Exception as e:  # pragma: no cover - defensive
+                    # aggregation bugs surface on the engine, not as a
+                    # silent daemon-thread death that strands task_done
+                    self.worker_errors.append(e)
                 # pairs with drain()'s Queue.join(): the token only counts
                 # as done once its shard read landed and was aggregated
                 self._ready.task_done()
@@ -709,33 +857,74 @@ class AsyncIOEngine:
                 qd = int(256 * self.store.n_shards * min(1.0, self.worker_budget / 0.3))
                 if kind == "w":
                     # whole-batch serial write, 4K-random write cost model
-                    # (ids were deduped last-writer-wins at submit time)
-                    self.store.write_rows(ids, a, dedupe=False)
-                    virt = self.model.write_time(len(ids),
-                                                 self.store.row_bytes, qd)
+                    # (ids were deduped last-writer-wins at submit time);
+                    # the whole-batch path is chaos stream 0
+                    def wtime_fn(attempt, hedged):
+                        return self.model.write_time(
+                            len(ids), self.store.row_bytes, qd)
+
+                    def wio_fn(fd):
+                        if fd is not None and fd.torn:
+                            k = len(ids) // 2
+                            self.store.write_rows(ids[:k], a[:k],
+                                                  dedupe=False)
+                            return
+                        self.store.write_rows(ids, a, dedupe=False)
+
+                    virt, _, _ = _recover_op(self, 0, "w", wtime_fn, wio_fn)
                     with self._lock:
                         self.stats.virtual_write_s += virt
                         self.stats.wall_complete_s += time.perf_counter() - t0
                     fut.set_result((None, virt))
                 else:
                     out, dest = a, b
-                    data = self.store.read_rows(ids)
-                    if out is not None:
-                        out[dest if dest is not None
-                            else slice(0, len(ids))] = data
-                    virt = self.model.read_time(len(ids),
-                                                self.store.row_bytes, qd)
+
+                    def rtime_fn(attempt, hedged):
+                        return self.model.read_time(
+                            len(ids), self.store.row_bytes, qd)
+
+                    box = {}
+
+                    def rio_fn(fd):
+                        # single read on the SUCCESSFUL attempt only —
+                        # retries return bit-identical bytes
+                        data = self.store.read_rows(ids)
+                        if out is not None:
+                            out[dest if dest is not None
+                                else slice(0, len(ids))] = data
+                        box["data"] = data
+
+                    virt, _, _ = _recover_op(self, 0, "r", rtime_fn, rio_fn)
                     with self._lock:
                         self.stats.virtual_io_s += virt
                         self.stats.wall_complete_s += time.perf_counter() - t0
-                    fut.set_result((data if out is None else None, virt))
-            except Exception as e:      # pragma: no cover
+                    fut.set_result((box["data"] if out is None else None,
+                                    virt))
+            except Exception as e:
+                # errored request: the waiter sees the exception via the
+                # future, and the worker stays alive for the next item —
+                # fatal chaos faults surface at ticket.wait(), never as a
+                # silently-dead daemon thread
                 fut.set_exception(e)
             finally:
                 self._legacy_lk.release()
                 # pairs with drain()'s Queue.join(): the item only counts
                 # as done once its read landed and its future resolved
                 self._sq.task_done()
+
+    # -- degraded-shard introspection (graceful degradation) --------------
+    def degraded_shards(self) -> np.ndarray:
+        """Shards whose consecutive-failure streak crossed
+        ``degrade_after``: the cache suspends prefetch/checkpoint traffic
+        to them while demand gathers keep being served (with retries)."""
+        with self._lock:
+            return np.array([s for s, v in enumerate(self._fail_streak)
+                             if v >= self.degrade_after], np.int64)
+
+    def shard_of(self, ids: np.ndarray) -> np.ndarray:
+        """Map global row ids to the chaos/degradation stream (= storage
+        shard) that serves them."""
+        return self.store.locate(np.asarray(ids))[0]
 
     def close(self):
         """Drain, stop, and JOIN the worker threads (idempotent).
@@ -782,11 +971,36 @@ class SyncIOEngine:
     held for the full IO latency and effective queue depth collapses."""
 
     def __init__(self, store: FeatureStore, total_workers: int = 8,
-                 env: HardwareEnvelope = DEFAULT_ENVELOPE):
+                 env: HardwareEnvelope = DEFAULT_ENVELOPE,
+                 chaos: ChaosSchedule | None | str = "env",
+                 retry: RetryPolicy | None = None,
+                 degrade_after: int = 3):
         self.store = store
         self.env = env
         self.model = ArrayModel(store.n_shards, env)
         self.stats = IOStats()
+        # chaos recovery state (stream 0: the coupled path services the
+        # whole batch as one attempt); fatal faults raise synchronously
+        # from submit — the coupled contract has no deferred ticket wait
+        self.chaos = ChaosSchedule.from_env() if chaos == "env" else chaos
+        self.retry = retry if retry is not None else DEFAULT_RETRY
+        self.degrade_after = degrade_after
+        self._chaos_seq = [0]
+        self._fail_streak = [0]
+        self.worker_errors: list = []
+        self._ssd = SSDModel(env, chaos=self.chaos)
+        self._fault = self._ssd.fault
+        self._lock = threading.Lock()
+
+    def degraded_shards(self) -> np.ndarray:
+        """Whole engine degrades as one unit (single service stream)."""
+        with self._lock:
+            if self._fail_streak[0] >= self.degrade_after:
+                return np.arange(self.store.n_shards, dtype=np.int64)
+        return np.empty(0, np.int64)
+
+    def shard_of(self, ids: np.ndarray) -> np.ndarray:
+        return self.store.locate(np.asarray(ids))[0]
 
     def close(self):
         pass                            # no worker threads to reap
@@ -806,14 +1020,25 @@ class SyncIOEngine:
                dest: np.ndarray | None = None, tag: str = "",
                cq: CompletionQueue | None = None) -> IOTicket:
         t0 = time.perf_counter()
-        data = self.store.read_rows(ids)
-        if out is not None:
-            out[dest if dest is not None else slice(0, len(ids))] = data
-        # coupled submit/poll: a warp holds its slot from submit to
-        # completion, collapsing effective queue depth (paper: ~60% of peak)
-        virt = self.model.read_time(len(ids), self.store.row_bytes,
-                                    int(256 * self.store.n_shards * 0.6))
-        virt += self._staging_virt(len(ids))
+        box = {}
+
+        def time_fn(attempt, hedged):
+            # coupled submit/poll: a warp holds its slot from submit to
+            # completion, collapsing effective queue depth (paper: ~60%
+            # of peak); staging rides along on every (re)attempt
+            return (self.model.read_time(
+                        len(ids), self.store.row_bytes,
+                        int(256 * self.store.n_shards * 0.6))
+                    + self._staging_virt(len(ids)))
+
+        def io_fn(fd):
+            data = self.store.read_rows(ids)
+            if out is not None:
+                out[dest if dest is not None else slice(0, len(ids))] = data
+            box["data"] = data
+
+        virt, _, _ = _recover_op(self, 0, "r", time_fn, io_fn)
+        data = box["data"]
         wall = time.perf_counter() - t0
         self.stats.requests += len(ids)
         self.stats.bytes += len(ids) * self.store.row_bytes
@@ -839,10 +1064,21 @@ class SyncIOEngine:
         ids = np.asarray(ids)
         rows = np.asarray(rows, self.store.dtype)
         ids, rows = keep_last_writer(ids, rows)
-        self.store.write_rows(ids, rows, dedupe=False)
-        virt = self.model.write_time(len(ids), self.store.row_bytes,
-                                     int(256 * self.store.n_shards * 0.6))
-        virt += self._staging_virt(len(ids))
+
+        def time_fn(attempt, hedged):
+            return (self.model.write_time(
+                        len(ids), self.store.row_bytes,
+                        int(256 * self.store.n_shards * 0.6))
+                    + self._staging_virt(len(ids)))
+
+        def io_fn(fd):
+            if fd is not None and fd.torn:
+                k = len(ids) // 2
+                self.store.write_rows(ids[:k], rows[:k], dedupe=False)
+                return
+            self.store.write_rows(ids, rows, dedupe=False)
+
+        virt, _, _ = _recover_op(self, 0, "w", time_fn, io_fn)
         nbytes = len(ids) * self.store.row_bytes
         self.stats.write_requests += len(ids)
         self.stats.write_bytes += nbytes
@@ -869,16 +1105,25 @@ class CPUManagedEngine(SyncIOEngine):
 
 def make_engine(mode: str, store: FeatureStore, worker_budget: float = 0.3,
                 env: HardwareEnvelope = DEFAULT_ENVELOPE,
-                striped: bool = True, coalesce_gap: int | str = 8):
+                striped: bool = True, coalesce_gap: int | str = 8,
+                chaos: ChaosSchedule | None | str = "env",
+                retry: RetryPolicy | None = None,
+                degrade_after: int = 3):
     """Engine for an ablation mode (shared by trainer and server):
     ``cpu`` -> CPUManagedEngine, ``gids`` -> SyncIOEngine, anything
     Helios-flavoured -> AsyncIOEngine (``striped``/``coalesce_gap`` tune
     the per-shard SQ read path; ``coalesce_gap="adaptive"`` re-picks the
     gap per batch from offset density; ``striped=False`` is the legacy
-    single-queue ablation)."""
+    single-queue ablation).  ``chaos``/``retry``/``degrade_after``
+    configure fault injection + bounded-retry recovery on every mode —
+    the default ``chaos="env"`` reads ``HELIOS_CHAOS``."""
     if mode == "cpu":
-        return CPUManagedEngine(store, env=env)
+        return CPUManagedEngine(store, env=env, chaos=chaos, retry=retry,
+                                degrade_after=degrade_after)
     if mode == "gids":
-        return SyncIOEngine(store, env=env)
+        return SyncIOEngine(store, env=env, chaos=chaos, retry=retry,
+                            degrade_after=degrade_after)
     return AsyncIOEngine(store, worker_budget=worker_budget, env=env,
-                         striped=striped, coalesce_gap=coalesce_gap)
+                         striped=striped, coalesce_gap=coalesce_gap,
+                         chaos=chaos, retry=retry,
+                         degrade_after=degrade_after)

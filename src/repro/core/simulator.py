@@ -15,6 +15,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
+from repro.ft.chaos import ChaosSchedule, FaultDecision
+
 
 @dataclass(frozen=True)
 class HardwareEnvelope:
@@ -46,8 +48,21 @@ HOST_STAGE_BW = 2e9            # bytes/s CPU staging-buffer gather
 
 @dataclass
 class SSDModel:
-    """Throughput/latency model for one SSD under concurrent NVMe commands."""
+    """Throughput/latency model for one SSD under concurrent NVMe commands.
+
+    ``chaos`` attaches a seeded fault schedule: the engines consult
+    ``fault()`` on every per-shard service attempt, so injected media
+    errors, latency spikes, stuck windows, and torn writes are part of
+    the *hardware model*, deterministic given the request trace."""
     env: HardwareEnvelope = field(default_factory=lambda: DEFAULT_ENVELOPE)
+    chaos: ChaosSchedule | None = None
+
+    def fault(self, stream: int, kind: str, seq: int,
+              attempt: int) -> FaultDecision | None:
+        """Schedule-driven fault for one service attempt (None = clean)."""
+        if self.chaos is None:
+            return None
+        return self.chaos.decide(stream, kind, seq, attempt)
 
     def io_time(self, n_requests: int, bytes_per_request: int,
                 queue_depth: int) -> float:
@@ -170,8 +185,20 @@ class NetworkModel:
     at link bandwidth.  Messages pipeline up to ``max_inflight`` so a batch
     pays the wire latency once, not per message — the same Little's-law
     shape as the NVMe queue-depth fraction.
+
+    ``chaos`` mirrors ``SSDModel.chaos`` for the fabric: per-peer
+    transient drops, latency-spike and frozen-peer windows consulted by
+    ``RemoteIOEngine`` on every peer service attempt.
     """
     net: NetworkEnvelope = field(default_factory=lambda: DEFAULT_NETWORK)
+    chaos: ChaosSchedule | None = None
+
+    def fault(self, stream: int, kind: str, seq: int,
+              attempt: int) -> FaultDecision | None:
+        """Schedule-driven fault for one peer service attempt."""
+        if self.chaos is None:
+            return None
+        return self.chaos.decide(stream, kind, seq, attempt)
 
     def xfer_time(self, n_messages: int, total_bytes: int) -> float:
         """Virtual seconds to move ``total_bytes`` split over

@@ -17,10 +17,15 @@ gathers and pipeline operators may inspect dirty state concurrently.
 """
 from __future__ import annotations
 
+import json
+import os
 import threading
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
+
+from repro.core.iostack import JOURNAL_FILE
 
 
 @dataclass
@@ -194,3 +199,103 @@ class WriteCombiner:
             if self._rows is not None:
                 self._rows = self._rows[keep]
             return dropped
+
+
+_JOURNAL_MAGIC = b"HELJ1\n"
+
+
+class FlushJournal:
+    """Write-intent redo journal for crash-consistent flush barriers.
+
+    The flush path is submit -> shard writes land out of order ->
+    complete -> ``store.flush()``.  A crash anywhere in that window can
+    tear the barrier: some shards programmed, some not, and the dirty
+    bits that said which rows were in flight died with the process.  The
+    journal closes the window REDO-style:
+
+      * ``record(ids, rows)`` durably stages the full barrier payload
+        (atomic tmp+fsync+rename — the journal itself can't tear: either
+        the complete entry exists or the old state does) BEFORE the
+        first shard write is submitted,
+      * ``commit()`` removes it only after ``store.flush()`` made every
+        row durable,
+      * ``recover(store)`` on restart replays a pending barrier (rewrites
+        ALL journalled rows — idempotent, last-writer-wins deduped at
+        record time) or discards a torn/corrupt journal entry, since a
+        tear can only happen before ``record`` returned, i.e. before any
+        shard write was issued.
+
+    The payload is checksummed, so torn-write detection on the journal
+    file itself is part of restore.
+    """
+
+    def __init__(self, root: str):
+        self.path = os.path.join(root, JOURNAL_FILE)
+
+    def record(self, ids: np.ndarray, rows: np.ndarray) -> None:
+        ids = np.ascontiguousarray(np.asarray(ids, np.int64))
+        rows = np.ascontiguousarray(rows)
+        id_b, row_b = ids.tobytes(), rows.tobytes()
+        hdr = {"n": int(len(ids)), "row_dim": int(rows.shape[1]),
+               "dtype": rows.dtype.name,
+               "crc": zlib.crc32(row_b, zlib.crc32(id_b)) & 0xFFFFFFFF}
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(_JOURNAL_MAGIC)
+            f.write((json.dumps(hdr) + "\n").encode())
+            f.write(id_b)
+            f.write(row_b)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)      # atomic: all-or-nothing intent
+
+    def commit(self) -> None:
+        try:
+            os.remove(self.path)
+        except FileNotFoundError:
+            pass                        # already committed / never recorded
+
+    def pending(self):
+        """``None`` (no journal), ``("ok", ids, rows)`` (intact barrier to
+        replay) or ``("torn", None, None)`` (corrupt/torn entry)."""
+        try:
+            with open(self.path, "rb") as f:
+                blob = f.read()
+        except FileNotFoundError:
+            return None
+        try:
+            if not blob.startswith(_JOURNAL_MAGIC):
+                raise ValueError("bad magic")
+            body = blob[len(_JOURNAL_MAGIC):]
+            nl = body.index(b"\n")
+            hdr = json.loads(body[:nl])
+            n, dim = int(hdr["n"]), int(hdr["row_dim"])
+            dt = np.dtype(hdr["dtype"])
+            payload = body[nl + 1:]
+            id_nb = n * 8
+            if len(payload) != id_nb + n * dim * dt.itemsize:
+                raise ValueError("truncated payload")
+            if zlib.crc32(payload) & 0xFFFFFFFF != hdr["crc"]:
+                raise ValueError("crc mismatch")
+            ids = np.frombuffer(payload[:id_nb], np.int64)
+            rows = np.frombuffer(payload[id_nb:], dt).reshape(n, dim)
+            return "ok", ids, rows
+        except (ValueError, KeyError, json.JSONDecodeError):
+            return "torn", None, None
+
+    def recover(self, store) -> dict:
+        """Replay-or-discard on restart; returns what happened."""
+        st = self.pending()
+        if st is None:
+            return {"action": "none"}
+        state, ids, rows = st
+        if (state != "ok" or rows.shape[1] != store.row_dim
+                or rows.dtype != store.dtype):
+            # torn journal = crash BEFORE record() returned, so no shard
+            # write of this barrier was ever issued: discarding is safe
+            self.commit()
+            return {"action": "discarded"}
+        store.write_rows(ids.copy(), np.array(rows), dedupe=False)
+        store.flush()
+        self.commit()
+        return {"action": "replayed", "rows": int(len(ids))}

@@ -34,10 +34,12 @@ from concurrent.futures import Future
 import numpy as np
 
 from repro.core.iostack import (CompletionQueue, IOStats, IOTicket,
-                                _ShardedCompletion, keep_last_writer)
+                                _ShardedCompletion, _recover_op,
+                                keep_last_writer)
 from repro.core.simulator import (ArrayModel, DEFAULT_ENVELOPE,
                                   HardwareEnvelope, NetworkModel)
 from repro.distributed.partition import PartitionedFeatureStore
+from repro.ft.chaos import ChaosSchedule, DEFAULT_RETRY, RetryPolicy
 
 # queue depth a dead peer's storage sustains without its owner's
 # submission threads (fabric-attached direct access, no batching help)
@@ -50,7 +52,10 @@ class RemoteIOEngine:
     def __init__(self, pstore: PartitionedFeatureStore, me: int = 0,
                  worker_budget: float = 0.3, total_workers: int = 8,
                  env: HardwareEnvelope = DEFAULT_ENVELOPE,
-                 net: NetworkModel | None = None, coordinator=None):
+                 net: NetworkModel | None = None, coordinator=None,
+                 chaos: ChaosSchedule | None | str = "env",
+                 retry: RetryPolicy | None = None,
+                 degrade_after: int = 3):
         if not 0 <= me < pstore.n_workers:
             raise ValueError(f"me={me} outside fleet of {pstore.n_workers}")
         self.store = pstore
@@ -58,6 +63,19 @@ class RemoteIOEngine:
         self.env = env
         self.net = net if net is not None else NetworkModel()
         self.coordinator = coordinator
+        # fabric fault injection + hedged-read recovery: chaos streams
+        # are PEERS here (the fabric misbehaves per-link), and a read
+        # that times out against a peer is hedged — re-priced as the
+        # dead-peer reroute (owner storage over the fabric at collapsed
+        # queue depth), one mechanism for flaps and stuck peers alike
+        self.chaos = ChaosSchedule.from_env() if chaos == "env" else chaos
+        self.net.chaos = self.chaos
+        self.retry = retry if retry is not None else DEFAULT_RETRY
+        self.degrade_after = degrade_after
+        self._fault = self.net.fault
+        self._chaos_seq = [0] * pstore.n_workers
+        self._fail_streak = [0] * pstore.n_workers
+        self.worker_errors: list = []
         self.worker_budget = worker_budget
         self.n_workers = max(1, int(round(worker_budget * total_workers)))
         self._models = [ArrayModel(st.n_shards, env) for st in pstore.stores]
@@ -174,50 +192,69 @@ class RemoteIOEngine:
         return tk
 
     # -- per-peer service ------------------------------------------------
+    def _route(self, w: int, n: int, span_bytes: int, hedged: bool,
+               model_time):
+        """Price one service attempt against peer ``w``.  ``hedged``
+        attempts and dead peers both take the reroute path: the owner's
+        storage reached directly over the fabric at a collapsed queue
+        depth (no owner-side submission threads to keep the array busy)."""
+        st = self.store.stores[w]
+        if w == self.me:
+            return model_time(n, st.row_bytes, self._qd(w)), 0.0, "local"
+        net_s = self.net.xfer_time(n, span_bytes)
+        if self.peer_alive(w) and not hedged:
+            return model_time(n, st.row_bytes, self._qd(w)) + net_s, \
+                net_s, "remote"
+        return model_time(n, st.row_bytes, DEGRADED_QD) + net_s, \
+            net_s, "reroute"
+
     def _service_peer(self, w: int, offs: np.ndarray, dest: np.ndarray,
                       buf: np.ndarray):
         st = self.store.stores[w]
         n = len(offs)
         span_bytes = n * self.store.row_bytes
-        buf[dest] = st.read_rows(offs)
-        alive = self.peer_alive(w)
-        if w == self.me:
-            virt, net_s, kind = (
-                self._models[w].read_time(n, st.row_bytes, self._qd(w)),
-                0.0, "local")
-        elif alive:
-            t_peer = self._models[w].read_time(n, st.row_bytes, self._qd(w))
-            net_s = self.net.xfer_time(n, span_bytes)
-            virt, kind = t_peer + net_s, "remote"
-        else:
-            # dead peer: reach its storage directly over the fabric — the
-            # array runs at a collapsed queue depth without the owner's
-            # submission threads, and every row still crosses the network
-            t_deg = self._models[w].read_time(n, st.row_bytes, DEGRADED_QD)
-            net_s = self.net.xfer_time(n, span_bytes)
-            virt, kind = t_deg + net_s, "reroute"
-        return virt, net_s, span_bytes, kind, n
+        last = {"net_s": 0.0, "kind": "local"}
+
+        def time_fn(attempt, hedged):
+            virt, net_s, kind = self._route(
+                w, n, span_bytes, hedged, self._models[w].read_time)
+            last["net_s"], last["kind"] = net_s, kind
+            return virt
+
+        def io_fn(fd):
+            # one storage read on the successful attempt: retried and
+            # hedged gathers return bit-identical bytes
+            buf[dest] = st.read_rows(offs)
+
+        virt, _, _ = _recover_op(self, w, "r", time_fn, io_fn, hedge=True)
+        self._book_peer(last["kind"], n, last["net_s"])
+        return virt, 1, span_bytes
 
     def _service_peer_write(self, w: int, offs: np.ndarray,
                             rows: np.ndarray):
         st = self.store.stores[w]
         n = len(offs)
         span_bytes = n * self.store.row_bytes
-        st.write_rows(offs, rows, dedupe=False)
-        alive = self.peer_alive(w)
-        if w == self.me:
-            virt, net_s, kind = (
-                self._models[w].write_time(n, st.row_bytes, self._qd(w)),
-                0.0, "local")
-        elif alive:
-            t_peer = self._models[w].write_time(n, st.row_bytes, self._qd(w))
-            net_s = self.net.xfer_time(n, span_bytes)
-            virt, kind = t_peer + net_s, "remote"
-        else:
-            t_deg = self._models[w].write_time(n, st.row_bytes, DEGRADED_QD)
-            net_s = self.net.xfer_time(n, span_bytes)
-            virt, kind = t_deg + net_s, "reroute"
-        return virt, net_s, span_bytes, kind, n
+        last = {"net_s": 0.0, "kind": "local"}
+
+        def time_fn(attempt, hedged):
+            virt, net_s, kind = self._route(
+                w, n, span_bytes, hedged, self._models[w].write_time)
+            last["net_s"], last["kind"] = net_s, kind
+            return virt
+
+        def io_fn(fd):
+            if fd is not None and fd.torn:
+                # torn owner-write: only a prefix lands before the
+                # simulated crash (the flush journal replays the barrier)
+                k = n // 2
+                st.write_rows(offs[:k], rows[:k], dedupe=False)
+                return
+            st.write_rows(offs, rows, dedupe=False)
+
+        virt, _, _ = _recover_op(self, w, "w", time_fn, io_fn, hedge=True)
+        self._book_peer(last["kind"], n, last["net_s"])
+        return virt, 1, span_bytes
 
     def _book_peer(self, kind: str, n: int, net_s: float):
         with self._lock:
@@ -261,22 +298,38 @@ class RemoteIOEngine:
                 try:
                     t0 = time.perf_counter()
                     if kind == "w":
-                        virt, net_s, span, pk, n = \
-                            self._service_peer_write(w, offs, payload)
+                        out = self._service_peer_write(w, offs, payload)
                     else:
                         d, buf = payload
-                        virt, net_s, span, pk, n = \
-                            self._service_peer(w, offs, d, buf)
-                    self._book_peer(pk, n, net_s)
+                        out = self._service_peer(w, offs, d, buf)
                     # one peer batch == one "range" of wire traffic
-                    self._cqs[w].put((comp, (virt, 1, span,
+                    self._cqs[w].put((comp, (*out,
                                              time.perf_counter() - t0)))
-                except Exception as e:  # pragma: no cover
+                except Exception as e:
+                    # errored CQE: the owning ticket sees the exception
+                    # via shard_fail and the worker stays alive for the
+                    # next peer batch
                     self._cqs[w].put((comp, e))
             finally:
                 self._peer_lk[w].release()
-                self._reap_cq(w)
+                try:
+                    self._reap_cq(w)
+                except Exception as e:  # pragma: no cover - defensive
+                    self.worker_errors.append(e)
                 self._ready.task_done()
+
+    # -- degraded-peer introspection -------------------------------------
+    def degraded_shards(self) -> np.ndarray:
+        """Peers whose consecutive-failure streak crossed
+        ``degrade_after`` (same contract as
+        ``AsyncIOEngine.degraded_shards``, streams are peers here)."""
+        with self._lock:
+            return np.array([w for w, v in enumerate(self._fail_streak)
+                             if v >= self.degrade_after], np.int64)
+
+    def shard_of(self, ids: np.ndarray) -> np.ndarray:
+        """Owner peer of each global row id (the degradation stream)."""
+        return self.store.to_local(np.asarray(ids))[0]
 
     # -- lifecycle -------------------------------------------------------
     def drain(self):

@@ -64,17 +64,33 @@ class Coordinator:
     its gradient contribution for one step (compute path, bounded count).
     """
 
-    def __init__(self, n_workers: int, heartbeat_timeout: float = 5.0):
+    def __init__(self, n_workers: int, heartbeat_timeout: float = 5.0,
+                 clock=None):
+        """``clock`` makes failure detection deterministic: pass an engine
+        ``VirtualClock`` (its ``makespan`` is the time source) or any
+        zero-arg callable returning seconds; None keeps wall-clock
+        ``time.monotonic`` for live deployments."""
         self.workers = {i: WorkerState(i) for i in range(n_workers)}
         self.timeout = heartbeat_timeout
         self.detector = StragglerDetector()
         self.events: list = []
+        if clock is None:
+            self._now = time.monotonic
+        elif callable(clock):
+            self._now = clock
+        else:
+            self._now = clock.makespan
+
+    def _t(self, now: float | None) -> float:
+        # explicit None check: virtual time legitimately starts at 0.0,
+        # which a truthiness test would silently replace with wall-clock
+        return self._now() if now is None else now
 
     def heartbeat(self, worker_id: int, now: float | None = None):
-        self.workers[worker_id].last_heartbeat = now or time.monotonic()
+        self.workers[worker_id].last_heartbeat = self._t(now)
 
     def dead_workers(self, now: float | None = None) -> list[int]:
-        now = now or time.monotonic()
+        now = self._t(now)
         return [w.worker_id for w in self.workers.values()
                 if not w.alive or now - w.last_heartbeat > self.timeout]
 

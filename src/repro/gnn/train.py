@@ -81,7 +81,23 @@ class TrainerConfig:
     write_combine_rows: int = 0    # coalesce flush-on-demote batches smaller
                                    # than this into one combined ticket
                                    # (0 = one ticket per demotion batch)
+    # fault injection + recovery (ft.chaos): "env" reads HELIOS_CHAOS,
+    # None disables, or pass a ChaosSchedule; the retry knobs build one
+    # RetryPolicy shared by the feature/optimizer-table engines
+    chaos: object | None = "env"
+    io_deadline_s: float | None = None  # per-attempt virtual deadline
+    io_max_retries: int = 4
+    io_backoff_s: float = 1e-3     # exponential backoff base (virtual s)
     seed: int = 0
+
+    def retry_policy(self):
+        from repro.ft.chaos import DEFAULT_RETRY, RetryPolicy
+        if (self.io_deadline_s is None and self.io_max_retries == 4
+                and self.io_backoff_s == 1e-3):
+            return DEFAULT_RETRY
+        return RetryPolicy(max_retries=self.io_max_retries,
+                           backoff_base_s=self.io_backoff_s,
+                           deadline_s=self.io_deadline_s)
 
 
 class TrainableEmbeddingTable:
@@ -168,7 +184,8 @@ class OutOfCoreGNNTrainer:
         self.sampler = NeighborSampler(graph, cfg.fanouts, cfg.seed)
 
         # --- IO engine per mode ------------------------------------------
-        self.io = make_engine(cfg.mode, store, cfg.io_worker_budget)
+        self.io = make_engine(cfg.mode, store, cfg.io_worker_budget,
+                              chaos=cfg.chaos, retry=cfg.retry_policy())
 
         # --- hotness pre-sampling + cache placement (paper §3.2.2) -------
         # presample on a SEPARATE sampler so the training sampler's rng
@@ -210,7 +227,8 @@ class OutOfCoreGNNTrainer:
                               create=True, writable=True)
             c = HeteroCache(
                 st, None, 0, host_rows,
-                make_engine(cfg.mode, st, cfg.io_worker_budget),
+                make_engine(cfg.mode, st, cfg.io_worker_budget,
+                            chaos=cfg.chaos, retry=cfg.retry_policy()),
                 write_policy=cfg.write_policy,
                 write_combine_rows=cfg.write_combine_rows,
                 fused=cfg.fused_lookup)
@@ -517,7 +535,15 @@ class OutOfCoreGNNTrainer:
                      "span_bytes": self.io.stats.span_bytes,
                      "write_requests": self.io.stats.write_requests,
                      "write_bytes": self.io.stats.write_bytes,
-                     "virtual_write_s": self.io.stats.virtual_write_s}
+                     "virtual_write_s": self.io.stats.virtual_write_s,
+                     # fault-recovery visibility (chaos legs assert on it)
+                     "retries": self.io.stats.retries,
+                     "timeouts": self.io.stats.timeouts,
+                     "transient_errors": self.io.stats.transient_errors,
+                     "virtual_backoff_s": self.io.stats.virtual_backoff_s,
+                     "degraded_events": self.io.stats.degraded_events,
+                     "degraded_skipped_rows":
+                         self.cache.stats.degraded_skipped_rows}
         if cfg.train_embeddings:
             cs = self.cache.stats
             out["writeback"] = {

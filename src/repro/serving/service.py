@@ -69,7 +69,22 @@ class ServerConfig:
                                        # an owner-write sees the new value
     batch_window_v: float = 1e-3       # micro-batch time window (virtual s)
     max_batch_requests: int = 8        # micro-batch size window
+    # fault injection + recovery (ft.chaos), same semantics as
+    # TrainerConfig: "env" reads HELIOS_CHAOS, None disables
+    chaos: object | None = "env"
+    io_deadline_s: float | None = None
+    io_max_retries: int = 4
+    io_backoff_s: float = 1e-3
     seed: int = 0
+
+    def retry_policy(self):
+        from repro.ft.chaos import DEFAULT_RETRY, RetryPolicy
+        if (self.io_deadline_s is None and self.io_max_retries == 4
+                and self.io_backoff_s == 1e-3):
+            return DEFAULT_RETRY
+        return RetryPolicy(max_retries=self.io_max_retries,
+                           backoff_base_s=self.io_backoff_s,
+                           deadline_s=self.io_deadline_s)
 
 
 class GNNInferenceServer:
@@ -86,7 +101,8 @@ class GNNInferenceServer:
         self.sampler = NeighborSampler(graph, cfg.fanouts, cfg.seed)
 
         # --- IO engine per mode (same ablation axes as the trainer) ------
-        self.io = make_engine(cfg.mode, store, cfg.io_worker_budget)
+        self.io = make_engine(cfg.mode, store, cfg.io_worker_budget,
+                              chaos=cfg.chaos, retry=cfg.retry_policy())
 
         # --- hotness placement; presample on a SEPARATE sampler so the
         # serving sampler's rng stream is untouched (replayable) ----------

@@ -802,14 +802,20 @@ def test_embedding_checkpoint_gc_and_corruption(tmp_path, wstore):
     for s in (1, 2, 3):
         cm.save_embeddings(s, wstore, chunk_rows=512)
     assert cm.all_embedding_steps() == [2, 3]     # keep-k GC
-    # flip one byte in a shard: restore must refuse
+    # flip one byte in a shard: a non-fallback restore must refuse,
+    # and the default restore falls back to the newest INTACT step and
+    # reports what it skipped
     p = os.path.join(str(tmp_path / "ckpt"), f"emb_{3:010d}",
                      "table", "shard_0.bin")
     blob = bytearray(open(p, "rb").read())
     blob[-1] ^= 0xFF
     open(p, "wb").write(bytes(blob))
     with pytest.raises(IOError):
-        cm.restore_embeddings(wstore, step=3)
+        cm.restore_embeddings(wstore, step=3, fallback=False)
+    out = cm.restore_embeddings(wstore, step=3)
+    assert out["restored_step"] == 2
+    assert [s["step"] for s in out["skipped"]] == [3]
+    assert "corrupt" in out["skipped"][0]["error"]
 
 
 def test_embedding_checkpoint_geometry_mismatch(tmp_path, wstore):
