@@ -84,6 +84,25 @@ GATES = {
         # bytes still identical
         ("chaos/hedge/summary", "hedge_ok", "==", 1.0),
     ],
+    "obs": [
+        # tracer cost: installed-but-disabled must be free (< 2% wall),
+        # enabled < 10%, and every gathered byte bit-identical tracing
+        # on vs off
+        ("obs/overhead/summary", "disabled_ok", "==", 1.0),
+        ("obs/overhead/summary", "enabled_ok", "==", 1.0),
+        ("obs/overhead/summary", "identical_ok", "==", 1.0),
+        # spans must cover >= 95% of the traced epoch's virtual makespan,
+        # the export must be valid Chrome trace JSON, and no batch's
+        # critical path may exceed the sum of its phase times
+        ("obs/coverage/summary", "coverage_ok", "==", 1.0),
+        ("obs/coverage/summary", "trace_valid", "==", 1.0),
+        ("obs/coverage/summary", "critical_ok", "==", 1.0),
+        # bubble attribution: deep-pipeline overlap efficiency strictly
+        # above the serial epoch's (0 by construction); both SVG figures
+        # render from the exported trace
+        ("obs/attribution/summary", "overlap_ok", "==", 1.0),
+        ("obs/attribution/summary", "figs_ok", "==", 1.0),
+    ],
 }
 
 _OPS = {

@@ -26,10 +26,18 @@ def main() -> None:
     ap.add_argument("--json", default="",
                     help="also dump the emitted rows to this JSON file "
                          "(CI uploads it as the perf-regression artifact)")
+    ap.add_argument("--trace", metavar="OUT.json", default="",
+                    help="trace every benchmark workload into one Chrome/"
+                         "Perfetto JSON (sets HELIOS_TRACE before figs "
+                         "import; CI uploads it as the trace artifact)")
     args = ap.parse_args()
     if args.smoke:
         # figs reads the env var at import time, so set it before importing
         os.environ["HELIOS_BENCH_SMOKE"] = "1"
+    if args.trace:
+        # same import-order contract as --smoke: the tracer installs at
+        # repro.obs.trace import, which figs triggers transitively
+        os.environ["HELIOS_TRACE"] = args.trace
     from benchmarks import figs
     if args.list:
         for fn in figs.ALL:

@@ -28,7 +28,15 @@ def main():
                     choices=["static", "online"],
                     help="online re-derives cache placement from the live "
                          "request stream (asynchronous tier migration)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write a Chrome/Perfetto trace of every span "
+                         "(admission, batch build, gather, forward, IO "
+                         "tickets) to this path; same as HELIOS_TRACE")
     args = ap.parse_args()
+
+    from repro.obs import trace as _trace
+    if args.trace:
+        _trace.install(args.trace)
 
     root = tempfile.mkdtemp(prefix="helios_serve_")
     g = synth_graph(args.vertices, 8, skew=1.2, seed=0)
@@ -60,6 +68,15 @@ def main():
                   f"p99 {st.percentile(99)*1e6:7.0f} us | dedup saves "
                   f"{st.dedup_storage_savings:.0%} storage reads | cache hit "
                   f"{cs.hit_rate:.0%} ({cs.refreshes} refreshes)")
+        sm = st.summary()
+        print(f"{'':9s} overlap {sm['overlap_efficiency']:.0%}, "
+              f"bubble {sm['bubble_frac']:.0%}")
+
+    tr = _trace.TRACER
+    if args.trace and tr is not None:
+        tr.export(args.trace)
+        print(f"trace: {len(tr.spans)} spans -> {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -24,7 +24,15 @@ def main():
                     help="treat the feature rows as trainable embeddings: "
                          "gradient updates ride the cache write-back tiers "
                          "and flush to storage at the epoch barrier")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write a Chrome/Perfetto trace of every span "
+                         "(pipeline phases, IO tickets, cache ops) to this "
+                         "path; equivalent to HELIOS_TRACE=OUT.json")
     args = ap.parse_args()
+
+    from repro.obs import trace as _trace
+    if args.trace:
+        _trace.install(args.trace)
 
     root = tempfile.mkdtemp(prefix="helios_gnn_")
     g = synth_graph(args.vertices, 10, skew=1.2, seed=0)
@@ -59,6 +67,17 @@ def main():
             print(f"{'':16s} wrote {wb['written_rows']} embedding rows "
                   f"({wb['write_through_rows']} through, "
                   f"{wb['flushed_rows']} flushed on demote/barrier)")
+        if "obs" in out:
+            ob = out["obs"]
+            print(f"{'':16s} overlap {ob['overlap_efficiency']:.0%}, bubble "
+                  f"{ob['bubble_frac']:.0%}, span coverage {ob['coverage']:.0%}"
+                  f" ({ob['n_spans']} spans)")
+
+    tr = _trace.TRACER
+    if args.trace and tr is not None:
+        tr.export(args.trace)
+        print(f"trace: {len(tr.spans)} spans -> {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -29,14 +29,16 @@ kernel is validated in interpret mode by the kernel tests.
 """
 from __future__ import annotations
 
+import functools
 import os
 import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field, fields
 
 import numpy as np
 
 from repro.core.iostack import AsyncIOEngine, FeatureStore, keep_last_writer
+from repro.obs import trace as _trace
 from repro.core.policy import (CachePolicy, StaticPresamplePolicy,
                                patch_tables, tables_from_sets)
 from repro.core.simulator import (DEFAULT_ENVELOPE, HardwareEnvelope,
@@ -45,6 +47,24 @@ from repro.core.simulator import (DEFAULT_ENVELOPE, HardwareEnvelope,
 from repro.core.writeback import (FlushJournal, FlushResult,
                                   MutableTierTable, WriteCombiner,
                                   WriteResult)
+
+
+def _traced(name):
+    """Wrap a cache method in an obs span (track ``cache``).  Engine
+    submissions made inside the method parent to this span via the
+    tracer's thread-local stack, so ticket/service spans stitch back to
+    the cache phase that issued them.  Disabled cost: one global load,
+    one flag check, one extra frame."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(self, *a, **kw):
+            tr = _trace.TRACER
+            if tr is None or not tr.enabled:
+                return fn(self, *a, **kw)
+            with tr.span(name, track="cache", cat="cache"):
+                return fn(self, *a, **kw)
+        return wrapper
+    return deco
 
 
 @dataclass
@@ -80,6 +100,9 @@ class CacheStats:
     # graceful degradation: prefetch rows suppressed because their shard
     # is marked degraded by the engine (demand gathers still serve them)
     degraded_skipped_rows: int = 0
+    # locks the owning cache assigns (outer-to-inner order) so snapshot()
+    # never reads a refresh()/complete_write mid-update
+    _snap_locks: tuple = field(default=(), repr=False, compare=False)
 
     @property
     def hit_rate(self):
@@ -92,6 +115,43 @@ class CacheStats:
         ts = (self.virtual_device_s, self.virtual_host_s,
               self.virtual_storage_s, self.virtual_remote_s)
         return max(ts) if pipelined else sum(ts)
+
+    def _values(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)
+                if not f.name.startswith("_")}
+
+    def snapshot(self) -> "CacheStats":
+        """Atomic point-in-time copy, taken under the owning cache's
+        refresh + stats locks so a concurrent ``refresh()`` /
+        ``complete_write`` is either fully in or fully out."""
+        for lk in self._snap_locks:
+            lk.acquire()
+        try:
+            return CacheStats(**self._values())
+        finally:
+            for lk in reversed(self._snap_locks):
+                lk.release()
+
+    # ``cache.stats`` stays a live attribute (every existing call site
+    # reads fields off it directly); ``cache.stats()`` is the atomic
+    # snapshot the observability layer and benches use
+    __call__ = snapshot
+
+    def delta(self, since: "CacheStats") -> "CacheStats":
+        """Field-wise ``self - since`` over a fresh snapshot."""
+        cur = self.snapshot()._values()
+        base = since._values()
+        return CacheStats(**{k: v - base[k] for k, v in cur.items()})
+
+    def publish(self, prefix: str = "cache", registry=None) -> None:
+        """Publish counters (plus hit rate) into the obs metrics registry
+        as gauges, without changing the public fields."""
+        from repro.obs.metrics import REGISTRY
+        reg = registry if registry is not None else REGISTRY
+        snap = self.snapshot()
+        for k, v in snap._values().items():
+            reg.gauge(f"{prefix}.{k}").set(v)
+        reg.gauge(f"{prefix}.hit_rate").set(snap.hit_rate)
 
 
 @dataclass
@@ -382,6 +442,9 @@ class HeteroCache:
         self._stats_lock = threading.Lock()     # one accounting site, many threads
         # reentrant: maybe_refresh() holds it across due-check + refresh()
         self._refresh_lock = threading.RLock()
+        # snapshot order matches refresh()'s own acquire order (refresh
+        # outer, stats inner) so stats() can never deadlock against it
+        self.stats._snap_locks = (self._refresh_lock, self._stats_lock)
 
     # ------------------------------------------------------------------
     # split-phase gather: the ONE tier-plan/gather/stats code path
@@ -466,6 +529,7 @@ class HeteroCache:
         dup_fill = (dest[dup], fi[dup]) if dup.any() else None
         return plan, occ, dup_fill, np.asarray(kout, self.store.dtype)
 
+    @_traced("cache.gather.submit")
     def submit_planned(self, ids: np.ndarray,
                        n_rows: int | None = None) -> PendingGather:
         """Phase 1: snapshot tables, split by tier (fused lookup by
@@ -528,6 +592,7 @@ class HeteroCache:
             pg._looked = True
         return pg
 
+    @_traced("cache.gather.lookup")
     def lookup_planned(self, pg: PendingGather) -> None:
         """Phase 2: host-tier gather into the buffer + device-tier gather
         issue (HBM-parallel; Pallas kernel on real TPU).  Idempotent."""
@@ -543,6 +608,7 @@ class HeteroCache:
                                         axis=0)
             pg._looked = True
 
+    @_traced("cache.gather.complete")
     def complete_planned(self, pg: PendingGather) -> np.ndarray:
         """Phase 3: wait out the storage ticket, land the device rows,
         account stats ONCE, and feed the access stream to the policy."""
@@ -604,6 +670,7 @@ class HeteroCache:
     # ------------------------------------------------------------------
     # write path: mutable tiers, write-back dirty tracking, flush barrier
     # ------------------------------------------------------------------
+    @_traced("cache.write")
     def write_planned(self, ids: np.ndarray, rows: np.ndarray,
                       wait: bool = True):
         """Update feature rows through the tier hierarchy (SPLIT-PHASE).
@@ -689,6 +756,7 @@ class HeteroCache:
             return self.complete_write(pw)
         return pw
 
+    @_traced("cache.write.complete")
     def complete_write(self, pw: PendingWrite) -> WriteResult:
         """Harvest a split-phase write: wait out (or reap) the storage
         ticket and book its virtual seconds.  Idempotent; safe to call
@@ -849,6 +917,7 @@ class HeteroCache:
             return len(dirty), self.complete_write_back(pf)
         return len(dirty), 0.0
 
+    @_traced("cache.flush.submit")
     def flush_submit(self) -> "PendingEpochFlush | None":
         """Phase 1 of the epoch/checkpoint barrier: settle outstanding
         flush-on-demote tickets (their version-checked completion decides
@@ -887,6 +956,7 @@ class HeteroCache:
             return PendingEpochFlush(pf, len(ids),
                                      len(ids) * self.store.row_bytes)
 
+    @_traced("cache.flush.complete")
     def flush_complete(self, ef: "PendingEpochFlush | None") -> FlushResult:
         """Phase 2 of the barrier: complete the barrier ticket AND every
         split-phase write still in flight, then push the shard memmaps to
@@ -935,6 +1005,7 @@ class HeteroCache:
     # ------------------------------------------------------------------
     # asynchronous tier migration
     # ------------------------------------------------------------------
+    @_traced("cache.refresh")
     def refresh(self, scores: np.ndarray) -> RefreshResult:
         """Re-derive placement from ``scores`` and migrate the differences.
 
@@ -1093,6 +1164,7 @@ class HeteroCache:
     # ------------------------------------------------------------------
     # policy-driven prefetch: hide the FIRST miss, not just steady state
     # ------------------------------------------------------------------
+    @_traced("cache.prefetch.submit")
     def maybe_prefetch(self, k: int | None = None,
                        wait: bool = True):
         """Ask the policy for predicted-hot storage rows (rising score
@@ -1181,6 +1253,7 @@ class HeteroCache:
             return self.complete_prefetch(pp)
         return pp
 
+    @_traced("cache.prefetch.complete")
     def complete_prefetch(self, pp: PendingPrefetch) -> PrefetchResult | None:
         """Land an in-flight prefetch: wait out the admission ticket, then
         swap the admitted rows in.  Admissions are revalidated against the
@@ -1252,6 +1325,7 @@ class HeteroCache:
     # ------------------------------------------------------------------
     # cross-replica coherence: refresh stale cached copies in place
     # ------------------------------------------------------------------
+    @_traced("cache.invalidate")
     def invalidate_rows(self, ids: np.ndarray) -> tuple:
         """Refresh this cache's RESIDENT copies of ``ids`` from the backing
         store — another replica (the rows' owner) rewrote them, so any

@@ -32,7 +32,7 @@ import queue
 import threading
 import time
 from concurrent.futures import Future
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 
 import numpy as np
 
@@ -40,6 +40,7 @@ from repro.core.simulator import (ArrayModel, DEFAULT_ENVELOPE,
                                   HardwareEnvelope, SSDModel)
 from repro.ft.chaos import (ChaosSchedule, DEFAULT_RETRY, FatalIOError,
                             RetryPolicy, serve_with_recovery)
+from repro.obs import trace as _trace
 
 # write-intent journal the flush barrier parks in the store directory
 # (see writeback.FlushJournal); named here because FeatureStore owns the
@@ -296,6 +297,9 @@ class IOStats:
     virtual_backoff_s: float = 0.0      # virtual seconds spent backing off
     hedged_reads: int = 0               # peer batches rerouted post-timeout
     degraded_events: int = 0            # streams newly marked degraded
+    # engine lock, assigned by the owning engine so snapshot() is atomic
+    # with respect to in-flight completions (excluded from repr/compare)
+    _lock: object = field(default=None, repr=False, compare=False)
 
     def bw(self) -> float:
         return self.bytes / self.virtual_io_s if self.virtual_io_s else 0.0
@@ -303,6 +307,36 @@ class IOStats:
     def write_bw(self) -> float:
         return (self.write_bytes / self.virtual_write_s
                 if self.virtual_write_s else 0.0)
+
+    def _values(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)
+                if not f.name.startswith("_")}
+
+    def snapshot(self) -> "IOStats":
+        """Point-in-time copy, taken under the owning engine's lock (when
+        attached) so no field pair straddles an in-flight completion."""
+        lk = self._lock
+        if lk is not None:
+            with lk:
+                return IOStats(**self._values())
+        return IOStats(**self._values())
+
+    def delta(self, since: "IOStats") -> "IOStats":
+        """Field-wise ``self - since`` over a fresh snapshot — what benches
+        use instead of hand-subtracting counter dicts."""
+        cur = self.snapshot()._values()
+        base = since._values()
+        return IOStats(**{k: v - base[k] for k, v in cur.items()})
+
+    def publish(self, prefix: str = "io", registry=None) -> None:
+        """Publish every counter (plus derived bandwidths) into the obs
+        metrics registry as gauges, without touching the public fields."""
+        from repro.obs.metrics import REGISTRY
+        reg = registry if registry is not None else REGISTRY
+        for k, v in self.snapshot()._values().items():
+            reg.gauge(f"{prefix}.{k}").set(v)
+        reg.gauge(f"{prefix}.bw").set(self.bw())
+        reg.gauge(f"{prefix}.write_bw").set(self.write_bw())
 
 
 def coalesce_offsets(offsets: np.ndarray, gap: int):
@@ -376,7 +410,7 @@ class _ShardedCompletion:
 
     __slots__ = ("engine", "fut", "data", "pending", "max_virt", "ranges",
                  "span_bytes", "wall", "exc", "done_shards",
-                 "failed_shards", "kind", "_lk")
+                 "failed_shards", "kind", "_lk", "t0w", "psid", "tag")
 
     def __init__(self, engine, fut: Future, data, pending: int,
                  kind: str = "r"):
@@ -393,6 +427,9 @@ class _ShardedCompletion:
         self.failed_shards = 0
         self.kind = kind                # "r" read | "w" write
         self._lk = threading.Lock()
+        self.t0w = 0.0                  # tracing: submit wall time (abs)
+        self.psid = None                # tracing: submit span id (parent)
+        self.tag = ""
 
     def shard_done(self, virt: float, n_ranges: int, span_bytes: int,
                    wall: float):
@@ -431,6 +468,16 @@ class _ShardedCompletion:
                 eng.stats.wall_complete_s += self.wall
                 eng.stats.ranges += self.ranges
                 eng.stats.span_bytes += self.span_bytes
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled and self.t0w:
+            tr.record(f"io.ticket.{'write' if self.kind == 'w' else 'read'}",
+                      self.t0w, time.perf_counter(), track="tickets",
+                      cat="io", parent=self.psid,
+                      args={"virt_s": virt, "ranges": self.ranges,
+                            "span_bytes": self.span_bytes,
+                            "shards": self.done_shards,
+                            "failed_shards": self.failed_shards,
+                            "tag": self.tag})
         if self.exc is not None:
             self.exc.completed_shards = self.done_shards
             self.exc.failed_shards = self.failed_shards
@@ -485,6 +532,11 @@ def _recover_op(eng, stream: int, kind: str, time_fn, io_fn,
                 st.transient_errors += rec.transient
                 st.virtual_backoff_s += rec.backoff_s
             bump_streak((rec.retries if rec is not None else 0) + 1)
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            tr.instant(f"ft.fatal.{kind}", track=f"s{stream}", cat="ft",
+                       args={"stream": stream,
+                             "retries": rec.retries if rec else 0})
         raise
     with eng._lock:
         st = eng.stats
@@ -498,6 +550,19 @@ def _recover_op(eng, stream: int, kind: str, time_fn, io_fn,
             eng._fail_streak[stream] = 0
         if rec.hedged:
             st.hedged_reads += 1
+    if rec.retries or rec.hedged:
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            if rec.retries:
+                tr.instant(f"ft.retry.{kind}", track=f"s{stream}", cat="ft",
+                           args={"stream": stream, "retries": rec.retries,
+                                 "timeouts": rec.timeouts,
+                                 "transient": rec.transient,
+                                 "backoff_s": rec.backoff_s})
+            if rec.hedged:
+                tr.instant(f"ft.hedge.{kind}", track=f"s{stream}", cat="ft",
+                           args={"stream": stream,
+                                 "extra_virt_s": rec.extra_virt_s})
     return virt, payload, rec
 
 
@@ -583,6 +648,7 @@ class AsyncIOEngine:
         self._shard_lk = [threading.Lock() for _ in range(store.n_shards)]
         self.stats = IOStats()
         self._lock = threading.Lock()
+        self.stats._lock = self._lock   # atomic IOStats.snapshot()
         self._stop = False
         target = self._worker if striped else self._worker_legacy
         self._threads = [threading.Thread(target=target, daemon=True)
@@ -599,7 +665,7 @@ class AsyncIOEngine:
         ids = np.asarray(ids)
         nbytes = len(ids) * self.store.row_bytes
         if not self.striped:
-            self._sq.put(("r", ids, out, dest, fut))
+            self._sq.put(("r", ids, out, dest, fut, t0))
             tk = IOTicket(fut, len(ids), nbytes,
                           time.perf_counter() - t0, tag, shards=1)
             with self._lock:
@@ -625,14 +691,24 @@ class AsyncIOEngine:
             if m.any():
                 batches.append((s, off[m], dest_idx[m]))
         tk = IOTicket(fut, len(ids), nbytes, 0.0, tag, shards=len(batches))
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            comp.t0w = t0
+            comp.tag = tag
+            comp.psid = tr.current()
         if not batches:                 # empty request: resolve immediately
             fut.set_result((buf if out is None else None, 0.0))
         else:
             comp.pending = len(batches)
             for s, offs, d in batches:
-                self._sqs[s].put(("r", offs, (d, buf), comp))
+                self._sqs[s].put(("r", offs, (d, buf), comp, t0))
                 self._ready.put(s)
         tk.submit_wall = time.perf_counter() - t0
+        if tr is not None and tr.enabled:
+            tr.record("io.submit.read", t0, time.perf_counter(),
+                      track="submit", cat="io", parent=comp.psid,
+                      args={"rows": len(ids), "shards": len(batches),
+                            "tag": tag})
         with self._lock:
             self.stats.requests += len(ids)
             self.stats.bytes += nbytes
@@ -664,7 +740,7 @@ class AsyncIOEngine:
         ids, rows = keep_last_writer(ids, rows)
         nbytes = len(ids) * self.store.row_bytes
         if not self.striped:
-            self._sq.put(("w", ids, rows, None, fut))
+            self._sq.put(("w", ids, rows, None, fut, t0))
             tk = IOTicket(fut, len(ids), nbytes,
                           time.perf_counter() - t0, tag, shards=1)
             with self._lock:
@@ -684,14 +760,24 @@ class AsyncIOEngine:
             if m.any():
                 batches.append((s, off[m], rows[m]))
         tk = IOTicket(fut, len(ids), nbytes, 0.0, tag, shards=len(batches))
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            comp.t0w = t0
+            comp.tag = tag
+            comp.psid = tr.current()
         if not batches:                 # empty batch: resolve immediately
             fut.set_result((None, 0.0))
         else:
             comp.pending = len(batches)
             for s, offs, data in batches:
-                self._sqs[s].put(("w", offs, data, comp))
+                self._sqs[s].put(("w", offs, data, comp, t0))
                 self._ready.put(s)
         tk.submit_wall = time.perf_counter() - t0
+        if tr is not None and tr.enabled:
+            tr.record("io.submit.write", t0, time.perf_counter(),
+                      track="submit", cat="io", parent=comp.psid,
+                      args={"rows": len(ids), "shards": len(batches),
+                            "tag": tag})
         with self._lock:
             self.stats.write_requests += len(ids)
             self.stats.write_bytes += nbytes
@@ -775,15 +861,24 @@ class AsyncIOEngine:
         carry everything the aggregation needs, so reaping is lock-free
         with respect to the shard's SERVICE path — a slow service on one
         shard never delays another shard's reap."""
+        t0 = time.perf_counter()
+        n = 0
         while True:
             try:
                 comp, cqe = self._cqs[s].get_nowait()
             except queue.Empty:
-                return
+                break
+            n += 1
             if isinstance(cqe, BaseException):
                 comp.shard_fail(cqe)
             else:
                 comp.shard_done(*cqe)
+        if n:
+            tr = _trace.TRACER
+            if tr is not None and tr.enabled:
+                tr.record("io.reap", t0, time.perf_counter(),
+                          track=f"ssd{s}/q", cat="io",
+                          args={"shard": s, "cqes": n})
 
     def _worker(self):
         while not self._stop:
@@ -803,7 +898,8 @@ class AsyncIOEngine:
                 continue
             try:
                 try:
-                    kind, offs, payload, comp = self._sqs[s].get_nowait()
+                    kind, offs, payload, comp, t_enq = \
+                        self._sqs[s].get_nowait()
                 except queue.Empty:     # pragma: no cover - token per entry
                     continue
                 try:
@@ -813,8 +909,19 @@ class AsyncIOEngine:
                     else:
                         d, buf = payload
                         out = self._service_shard(s, offs, d, buf)
-                    self._cqs[s].put((comp, (*out,
-                                             time.perf_counter() - t0)))
+                    t1 = time.perf_counter()
+                    self._cqs[s].put((comp, (*out, t1 - t0)))
+                    tr = _trace.TRACER
+                    if tr is not None and tr.enabled:
+                        psid = getattr(comp, "psid", None)
+                        tr.record("io.qwait", t_enq, t0, track=f"ssd{s}/q",
+                                  cat="io", parent=psid,
+                                  args={"shard": s, "kind": kind})
+                        tr.record(f"io.service.{kind}", t0, t1,
+                                  track=f"ssd{s}", cat="io", parent=psid,
+                                  args={"shard": s, "virt_s": out[0],
+                                        "ranges": out[1],
+                                        "span_bytes": out[2]})
                 except Exception as e:
                     # errored CQE: the owning ticket gets the exception
                     # (via shard_fail) and the worker stays alive to
@@ -844,7 +951,7 @@ class AsyncIOEngine:
             if not self._legacy_lk.acquire(timeout=0.1):
                 continue
             try:
-                kind, ids, a, b, fut = self._sq.get(timeout=0.1)
+                kind, ids, a, b, fut, t_enq = self._sq.get(timeout=0.1)
             except queue.Empty:
                 self._legacy_lk.release()
                 continue
@@ -872,9 +979,17 @@ class AsyncIOEngine:
                         self.store.write_rows(ids, a, dedupe=False)
 
                     virt, _, _ = _recover_op(self, 0, "w", wtime_fn, wio_fn)
+                    t1 = time.perf_counter()
                     with self._lock:
                         self.stats.virtual_write_s += virt
-                        self.stats.wall_complete_s += time.perf_counter() - t0
+                        self.stats.wall_complete_s += t1 - t0
+                    tr = _trace.TRACER
+                    if tr is not None and tr.enabled:
+                        tr.record("io.qwait", t_enq, t0, track="legacy/q",
+                                  cat="io", args={"kind": "w"})
+                        tr.record("io.service.w", t0, t1, track="legacy",
+                                  cat="io",
+                                  args={"virt_s": virt, "rows": len(ids)})
                     fut.set_result((None, virt))
                 else:
                     out, dest = a, b
@@ -895,9 +1010,17 @@ class AsyncIOEngine:
                         box["data"] = data
 
                     virt, _, _ = _recover_op(self, 0, "r", rtime_fn, rio_fn)
+                    t1 = time.perf_counter()
                     with self._lock:
                         self.stats.virtual_io_s += virt
-                        self.stats.wall_complete_s += time.perf_counter() - t0
+                        self.stats.wall_complete_s += t1 - t0
+                    tr = _trace.TRACER
+                    if tr is not None and tr.enabled:
+                        tr.record("io.qwait", t_enq, t0, track="legacy/q",
+                                  cat="io", args={"kind": "r"})
+                        tr.record("io.service.r", t0, t1, track="legacy",
+                                  cat="io",
+                                  args={"virt_s": virt, "rows": len(ids)})
                     fut.set_result((box["data"] if out is None else None,
                                     virt))
             except Exception as e:
@@ -991,6 +1114,7 @@ class SyncIOEngine:
         self._ssd = SSDModel(env, chaos=self.chaos)
         self._fault = self._ssd.fault
         self._lock = threading.Lock()
+        self.stats._lock = self._lock   # atomic IOStats.snapshot()
 
     def degraded_shards(self) -> np.ndarray:
         """Whole engine degrades as one unit (single service stream)."""
@@ -1039,7 +1163,12 @@ class SyncIOEngine:
 
         virt, _, _ = _recover_op(self, 0, "r", time_fn, io_fn)
         data = box["data"]
-        wall = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        wall = t1 - t0
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            tr.record("io.sync.read", t0, t1, track="sync", cat="io",
+                      args={"virt_s": virt, "rows": len(ids), "tag": tag})
         self.stats.requests += len(ids)
         self.stats.bytes += len(ids) * self.store.row_bytes
         self.stats.virtual_io_s += virt
@@ -1079,11 +1208,16 @@ class SyncIOEngine:
             self.store.write_rows(ids, rows, dedupe=False)
 
         virt, _, _ = _recover_op(self, 0, "w", time_fn, io_fn)
+        t1 = time.perf_counter()
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            tr.record("io.sync.write", t0, t1, track="sync", cat="io",
+                      args={"virt_s": virt, "rows": len(ids), "tag": tag})
         nbytes = len(ids) * self.store.row_bytes
         self.stats.write_requests += len(ids)
         self.stats.write_bytes += nbytes
         self.stats.virtual_write_s += virt
-        self.stats.wall_complete_s += time.perf_counter() - t0
+        self.stats.wall_complete_s += t1 - t0
         self.stats.write_batches += 1
         fut: Future = Future()
         fut.set_result((None, virt))

@@ -32,6 +32,8 @@ from dataclasses import dataclass
 from typing import Any, Callable
 
 from repro.core.simulator import VirtualClock
+from repro.obs import analyze as _analyze
+from repro.obs import trace as _trace
 
 
 @dataclass
@@ -70,13 +72,17 @@ class PipelineExecutor:
                                                 for op in plan}
         self.clock = VirtualClock()
         self.virtual_end = 0.0
+        # always-on virtual busy time per LOGICAL resource (op.resource even
+        # in serial modes) — feeds overlap efficiency / bubble attribution
+        self.resource_busy: dict[str, float] = {}
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def _run_op(self, op: Operator, ctx: dict, batch_idx: int, ready_at: float):
         t0 = time.perf_counter()
         out = op.fn(ctx)
-        wall = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        wall = t1 - t0
         virt = op.virtual_cost(ctx) if op.virtual_cost else wall
         with self._lock:
             st = self.timings[op.name]
@@ -86,6 +92,14 @@ class PipelineExecutor:
             resource = op.resource if self.mode != "nopipe" else "serial"
             end = self.clock.schedule(resource, ready_at, virt)
             self.virtual_end = max(self.virtual_end, end)
+            self.resource_busy[op.resource] = (
+                self.resource_busy.get(op.resource, 0.0) + virt)
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            tr.record(f"pipe.{op.name}", t0, t1, track=op.resource, cat="pipe",
+                      v0=end - virt, v1=end,
+                      args={"batch": batch_idx, "resource": op.resource,
+                            "deps": list(op.deps)})
         ctx[f"__end_{op.name}"] = end
         return out
 
@@ -155,7 +169,16 @@ class PipelineExecutor:
             "stages": {k: {"wall_s": v.wall_s, "virtual_s": v.virtual_s,
                            "calls": v.calls}
                        for k, v in self.timings.items()},
+            "overlap": self.overlap_report(),
         }
+
+    def overlap_report(self) -> dict:
+        """Overlap efficiency / compute-bubble fraction from the always-on
+        per-resource busy accounting (no tracer required)."""
+        with self._lock:
+            busy = dict(self.resource_busy)
+            makespan = self.virtual_end
+        return _analyze.overlap_report(busy, makespan)
 
     def close(self):
         for p in self.pools.values():

@@ -34,6 +34,7 @@ import numpy as np
 from repro.core.writeback import MutableTierTable
 from repro.distributed.partition import ConsistentHashPartition
 from repro.gnn.graph import CSRGraph
+from repro.obs import trace as _trace
 from repro.serving.scheduler import INTERACTIVE, PriorityClass
 from repro.serving.service import GNNInferenceServer, ServerConfig
 
@@ -102,6 +103,11 @@ class ServingFleet:
         """Route one request power-of-two-choices; returns
         ``(future, replica_index)``."""
         i = self.router.pick(self.queue_depths())
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            tr.instant("fleet.route", track=f"replica{i}", cat="fleet",
+                       args={"replica": i, "seeds": len(seeds),
+                             "klass": klass.name})
         self._settle_invalidations(i)
         return self.replicas[i].submit(seeds, klass), i
 
@@ -151,6 +157,10 @@ class ServingFleet:
         n, _ = self.replicas[i].cache.invalidate_rows(stale)
         self._applied[i][stale] = self.versions.versions(stale)
         self.invalidated_rows += n
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            tr.instant("fleet.invalidate", track=f"replica{i}", cat="fleet",
+                       args={"replica": i, "rows": n})
         return n
 
     # -- lifecycle -------------------------------------------------------

@@ -40,6 +40,7 @@ from repro.core.simulator import (ArrayModel, DEFAULT_ENVELOPE,
                                   HardwareEnvelope, NetworkModel)
 from repro.distributed.partition import PartitionedFeatureStore
 from repro.ft.chaos import ChaosSchedule, DEFAULT_RETRY, RetryPolicy
+from repro.obs import trace as _trace
 
 # queue depth a dead peer's storage sustains without its owner's
 # submission threads (fabric-attached direct access, no batching help)
@@ -87,6 +88,7 @@ class RemoteIOEngine:
         self.rerouted_batches = 0
         self.virtual_net_s = 0.0
         self._lock = threading.Lock()
+        self.stats._lock = self._lock   # atomic IOStats.snapshot()
         n_peers = pstore.n_workers
         self._sqs = [queue.Queue() for _ in range(n_peers)]
         self._cqs = [queue.Queue() for _ in range(n_peers)]
@@ -130,12 +132,17 @@ class RemoteIOEngine:
             if m.any():
                 batches.append((w, loc[m], dest_idx[m]))
         tk = IOTicket(fut, len(ids), nbytes, 0.0, tag, shards=len(batches))
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            comp.t0w = t0
+            comp.tag = tag
+            comp.psid = tr.current()
         if not batches:                 # empty request: resolve immediately
             fut.set_result((buf if out is None else None, 0.0))
         else:
             comp.pending = len(batches)
             for w, offs, d in batches:
-                self._sqs[w].put(("r", offs, (d, buf), comp))
+                self._sqs[w].put(("r", offs, (d, buf), comp, t0))
                 self._ready.put(w)
         tk.submit_wall = time.perf_counter() - t0
         with self._lock:
@@ -173,12 +180,17 @@ class RemoteIOEngine:
             if m.any():
                 batches.append((w, loc[m], rows[m]))
         tk = IOTicket(fut, len(ids), nbytes, 0.0, tag, shards=len(batches))
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            comp.t0w = t0
+            comp.tag = tag
+            comp.psid = tr.current()
         if not batches:
             fut.set_result((None, 0.0))
         else:
             comp.pending = len(batches)
             for w, offs, data in batches:
-                self._sqs[w].put(("w", offs, data, comp))
+                self._sqs[w].put(("w", offs, data, comp, t0))
                 self._ready.put(w)
         tk.submit_wall = time.perf_counter() - t0
         with self._lock:
@@ -227,7 +239,7 @@ class RemoteIOEngine:
             buf[dest] = st.read_rows(offs)
 
         virt, _, _ = _recover_op(self, w, "r", time_fn, io_fn, hedge=True)
-        self._book_peer(last["kind"], n, last["net_s"])
+        self._book_peer(last["kind"], n, last["net_s"], w)
         return virt, 1, span_bytes
 
     def _service_peer_write(self, w: int, offs: np.ndarray,
@@ -253,10 +265,10 @@ class RemoteIOEngine:
             st.write_rows(offs, rows, dedupe=False)
 
         virt, _, _ = _recover_op(self, w, "w", time_fn, io_fn, hedge=True)
-        self._book_peer(last["kind"], n, last["net_s"])
+        self._book_peer(last["kind"], n, last["net_s"], w)
         return virt, 1, span_bytes
 
-    def _book_peer(self, kind: str, n: int, net_s: float):
+    def _book_peer(self, kind: str, n: int, net_s: float, w: int):
         with self._lock:
             self.virtual_net_s += net_s
             if kind == "local":
@@ -267,6 +279,11 @@ class RemoteIOEngine:
                 self.remote_rows += n
                 self.rerouted_rows += n
                 self.rerouted_batches += 1
+        if kind == "reroute":
+            tr = _trace.TRACER
+            if tr is not None and tr.enabled:
+                tr.instant("net.reroute", track=f"peer{w}", cat="net",
+                           args={"peer": w, "rows": n, "net_s": net_s})
 
     def _reap_cq(self, w: int):
         while True:
@@ -292,7 +309,8 @@ class RemoteIOEngine:
                 continue
             try:
                 try:
-                    kind, offs, payload, comp = self._sqs[w].get_nowait()
+                    kind, offs, payload, comp, t_enq = \
+                        self._sqs[w].get_nowait()
                 except queue.Empty:     # pragma: no cover - token per entry
                     continue
                 try:
@@ -302,9 +320,21 @@ class RemoteIOEngine:
                     else:
                         d, buf = payload
                         out = self._service_peer(w, offs, d, buf)
+                    t1 = time.perf_counter()
                     # one peer batch == one "range" of wire traffic
-                    self._cqs[w].put((comp, (*out,
-                                             time.perf_counter() - t0)))
+                    self._cqs[w].put((comp, (*out, t1 - t0)))
+                    tr = _trace.TRACER
+                    if tr is not None and tr.enabled:
+                        psid = getattr(comp, "psid", None)
+                        tr.record("net.qwait", t_enq, t0,
+                                  track=f"peer{w}/q", cat="net",
+                                  parent=psid,
+                                  args={"peer": w, "kind": kind})
+                        tr.record(f"net.{'write' if kind == 'w' else 'read'}",
+                                  t0, t1, track=f"peer{w}", cat="net",
+                                  parent=psid,
+                                  args={"peer": w, "virt_s": out[0],
+                                        "rows": len(offs)})
                 except Exception as e:
                     # errored CQE: the owning ticket sees the exception
                     # via shard_fail and the worker stays alive for the

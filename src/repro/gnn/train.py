@@ -35,6 +35,8 @@ from repro.core.simulator import (DEFAULT_ENVELOPE, HOST_STAGE_BW,
 from repro.gnn.graph import CSRGraph
 from repro.gnn.models import init_gnn_params, make_gnn_train_step
 from repro.gnn.sampling import NeighborSampler, draw_unique
+from repro.obs import analyze as _analyze
+from repro.obs import trace as _trace
 from repro.train.optim import adamw
 
 
@@ -514,38 +516,55 @@ class OutOfCoreGNNTrainer:
             self.mom_cache.flush()
         if self.adam_cache is not None:
             self.adam_cache.flush()
+        # atomic snapshots: nothing here can read a concurrent completion
+        # or refresh mid-update (the serving path shares these objects)
+        cs_snap = self.cache.stats()
+        io_snap = self.io.stats.snapshot()
         out["cache"] = {
-            "hit_rate": self.cache.stats.hit_rate,
-            "device_hits": self.cache.stats.device_hits,
-            "host_hits": self.cache.stats.host_hits,
-            "storage_misses": self.cache.stats.storage_misses,
+            "hit_rate": cs_snap.hit_rate,
+            "device_hits": cs_snap.device_hits,
+            "host_hits": cs_snap.host_hits,
+            "storage_misses": cs_snap.storage_misses,
             "policy": self.cache.policy.name,
-            "refreshes": self.cache.stats.refreshes,
-            "promotions": self.cache.stats.promotions,
-            "demotions": self.cache.stats.demotions,
-            "virtual_migrate_s": self.cache.stats.virtual_migrate_s,
-            "prefetches": self.cache.stats.prefetches,
-            "prefetched_rows": self.cache.stats.prefetched_rows,
-            "virtual_prefetch_s": self.cache.stats.virtual_prefetch_s,
+            "refreshes": cs_snap.refreshes,
+            "promotions": cs_snap.promotions,
+            "demotions": cs_snap.demotions,
+            "virtual_migrate_s": cs_snap.virtual_migrate_s,
+            "prefetches": cs_snap.prefetches,
+            "prefetched_rows": cs_snap.prefetched_rows,
+            "virtual_prefetch_s": cs_snap.virtual_prefetch_s,
         }
-        out["io"] = {"requests": self.io.stats.requests,
-                     "bytes": self.io.stats.bytes,
-                     "virtual_s": self.io.stats.virtual_io_s,
-                     "ranges": self.io.stats.ranges,
-                     "span_bytes": self.io.stats.span_bytes,
-                     "write_requests": self.io.stats.write_requests,
-                     "write_bytes": self.io.stats.write_bytes,
-                     "virtual_write_s": self.io.stats.virtual_write_s,
+        out["io"] = {"requests": io_snap.requests,
+                     "bytes": io_snap.bytes,
+                     "virtual_s": io_snap.virtual_io_s,
+                     "ranges": io_snap.ranges,
+                     "span_bytes": io_snap.span_bytes,
+                     "write_requests": io_snap.write_requests,
+                     "write_bytes": io_snap.write_bytes,
+                     "virtual_write_s": io_snap.virtual_write_s,
                      # fault-recovery visibility (chaos legs assert on it)
-                     "retries": self.io.stats.retries,
-                     "timeouts": self.io.stats.timeouts,
-                     "transient_errors": self.io.stats.transient_errors,
-                     "virtual_backoff_s": self.io.stats.virtual_backoff_s,
-                     "degraded_events": self.io.stats.degraded_events,
+                     "retries": io_snap.retries,
+                     "timeouts": io_snap.timeouts,
+                     "transient_errors": io_snap.transient_errors,
+                     "virtual_backoff_s": io_snap.virtual_backoff_s,
+                     "degraded_events": io_snap.degraded_events,
                      "degraded_skipped_rows":
-                         self.cache.stats.degraded_skipped_rows}
+                         cs_snap.degraded_skipped_rows,
+                     # pipeline-bubble attribution (always on; see
+                     # repro.obs.analyze.overlap_report)
+                     "overlap_efficiency":
+                         out["overlap"]["overlap_efficiency"],
+                     "bubble_frac": out["overlap"]["bubble_frac"]}
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            # stats publish into the obs metrics registry (gauges), and
+            # the traced span tree yields the full per-phase attribution
+            io_snap.publish("train.io")
+            cs_snap.publish("train.cache")
+            out["obs"] = _analyze.analyze_epoch(tr,
+                                                makespan=out["virtual_s"])
         if cfg.train_embeddings:
-            cs = self.cache.stats
+            cs = cs_snap
             out["writeback"] = {
                 "written_rows": cs.written_rows,
                 "write_through_rows": cs.write_through_rows,

@@ -35,6 +35,7 @@ from repro.core.simulator import (DEFAULT_ENVELOPE, HOST_STAGE_BW,
 from repro.gnn.graph import CSRGraph
 from repro.gnn.models import init_gnn_params, make_gnn_infer_step
 from repro.gnn.sampling import NeighborSampler
+from repro.obs import trace as _trace
 from repro.serving.batcher import MicroBatcher
 from repro.serving.scheduler import (INTERACTIVE, PriorityClass, ServeRequest,
                                      SLOScheduler)
@@ -186,14 +187,20 @@ class GNNInferenceServer:
 
     # ------------------------------------------------------------------
     def _serve_one(self):
+        import time as _time
+        tr = _trace.TRACER
+        tracing = tr is not None and tr.enabled
+        w0 = _time.perf_counter() if tracing else 0.0
         admitted, start_v, rejected = self.scheduler.next_batch(self.now_v())
         for r in rejected:
             self.stats.reject(r.klass.name)
             r.future.set_result(None)
         if not admitted:
             return
+        w1 = _time.perf_counter() if tracing else 0.0
 
         micro = self.batcher.build(admitted)
+        w2 = _time.perf_counter() if tracing else 0.0
         cfg = self.cfg
         rb = self.store.row_bytes
         loc = self.cache.loc
@@ -206,6 +213,7 @@ class GNNInferenceServer:
                             for u in micro.unique_per_request)
         feats, n_dev, n_host, issued_storage, rows_fetched, t_storage = \
             self.batcher.gather(self.cache, micro, cfg.dedup)
+        w3 = _time.perf_counter() if tracing else 0.0
 
         # --- forward pass per request (shared compiled step) -------------
         import jax.numpy as jnp
@@ -233,19 +241,46 @@ class GNNInferenceServer:
             t_h2d = pcie_time(edges * 8 + rows_fetched * 8)
         t_fwd = 2 * edges * self.store.row_dim * cfg.hidden / MATMUL_RATE
 
+        t_gather = max(t_storage, t_host + t_dev) if self._pipelined \
+            else t_storage + t_host + t_dev
+        t_compute = t_h2d + t_fwd
         if self._pipelined:
             e_sample = self.clock.schedule("host", start_v, t_sample)
             # tier gathers overlap under the deep pipeline: bound by the
             # slowest tier, not the sum (paper's overlap ordering)
-            e_io = self.clock.schedule("io", e_sample,
-                                       max(t_storage, t_host + t_dev))
-            end_v = self.clock.schedule("device", e_io, t_h2d + t_fwd)
+            e_io = self.clock.schedule("io", e_sample, t_gather)
+            end_v = self.clock.schedule("device", e_io, t_compute)
         else:
             e_io = end_v = self.clock.schedule(
-                "serial", start_v,
-                t_sample + t_storage + t_host + t_dev + t_h2d + t_fwd)
+                "serial", start_v, t_sample + t_gather + t_compute)
+            e_sample = end_v - t_gather - t_compute
+            e_io = end_v - t_compute
+        # logical-resource busy time, accumulated whether or not a tracer
+        # is installed — summary()'s overlap/bubble numbers come from this
+        self.stats.add_busy(host=t_sample, io=t_gather, device=t_compute)
 
         self.scheduler.observe_service(end_v - start_v)
+
+        if tracing:
+            w4 = _time.perf_counter()
+            b = self.stats.batches
+            tr.record("serve.admit", w0, w1, track="host", cat="serve",
+                      args={"batch": b, "resource": "host",
+                            "admitted": len(admitted),
+                            "rejected": len(rejected)})
+            tr.record("serve.batch", w1, w2, track="host", cat="serve",
+                      v0=e_sample - t_sample, v1=e_sample,
+                      args={"batch": b, "resource": "host",
+                            "requests": len(admitted)})
+            tr.record("serve.gather", w2, w3, track="io", cat="serve",
+                      v0=e_io - t_gather, v1=e_io,
+                      args={"batch": b, "resource": "io",
+                            "rows": rows_fetched,
+                            "storage_rows": issued_storage})
+            tr.record("serve.forward", w3, w4, track="device", cat="serve",
+                      v0=end_v - t_compute, v1=end_v,
+                      args={"batch": b, "resource": "device",
+                            "requests": len(admitted)})
 
         # asynchronous tier migration: the policy re-derives placement from
         # the served access stream; migration rides the io resource so it
@@ -254,6 +289,7 @@ class GNNInferenceServer:
         if refresh is not None and refresh.virtual_s:
             self.clock.schedule("io" if self._pipelined else "serial",
                                 e_io, refresh.virtual_s)
+            self.stats.add_busy(io=refresh.virtual_s)
         # policy-driven prefetch: rows the score trend predicts will turn
         # hot are pulled ahead of their first request, riding the io
         # resource like migration does
@@ -262,6 +298,7 @@ class GNNInferenceServer:
             if pf is not None and pf.virtual_s:
                 self.clock.schedule("io" if self._pipelined else "serial",
                                     e_io, pf.virtual_s)
+                self.stats.add_busy(io=pf.virtual_s)
 
         # --- complete futures + metrics ----------------------------------
         st = self.stats

@@ -26,11 +26,36 @@ class ServingStats:
     storage_rows_naive: int = 0
     storage_rows_issued: int = 0
     virtual_end: float = 0.0
+    # always-on per-LOGICAL-resource virtual busy time (host/io/device),
+    # accumulated by the server per micro-batch — feeds overlap efficiency
+    # and bubble attribution exactly like the pipeline's resource_busy
+    resource_busy: dict = field(default_factory=dict)
 
     # ------------------------------------------------------------------
     def record(self, klass: str, latency_v: float):
         self.served += 1
         self.latencies.setdefault(klass, []).append(latency_v)
+
+    def add_busy(self, **virt_s):
+        for k, v in virt_s.items():
+            self.resource_busy[k] = self.resource_busy.get(k, 0.0) + v
+
+    def overlap_report(self) -> dict:
+        from repro.obs.analyze import overlap_report
+        return overlap_report(self.resource_busy, self.virtual_end)
+
+    def publish(self, prefix: str = "serve", registry=None) -> None:
+        """Publish counters + latency percentiles into the obs metrics
+        registry without changing the summary() dict."""
+        from repro.obs.metrics import REGISTRY
+        reg = registry if registry is not None else REGISTRY
+        for k, v in self.summary().items():
+            if isinstance(v, (int, float)):
+                reg.gauge(f"{prefix}.{k}").set(v)
+        h = reg.histogram(f"{prefix}.latency_v")
+        for lat in self.latencies.values():
+            for v in lat:
+                h.observe(v)
 
     def reject(self, klass: str):
         self.rejected[klass] = self.rejected.get(klass, 0) + 1
@@ -67,6 +92,7 @@ class ServingStats:
 
     # ------------------------------------------------------------------
     def summary(self) -> dict:
+        ov = self.overlap_report()
         return {
             "submitted": self.submitted,
             "served": self.served,
@@ -79,4 +105,6 @@ class ServingStats:
             "dedup_row_savings": self.dedup_row_savings,
             "dedup_storage_savings": self.dedup_storage_savings,
             "virtual_end": self.virtual_end,
+            "overlap_efficiency": ov["overlap_efficiency"],
+            "bubble_frac": ov["bubble_frac"],
         }
