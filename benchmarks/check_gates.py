@@ -103,6 +103,22 @@ GATES = {
         ("obs/attribution/summary", "overlap_ok", "==", 1.0),
         ("obs/attribution/summary", "figs_ok", "==", 1.0),
     ],
+    "congestion": [
+        # class-aware scheduling: under a mixed storm (prefetch + writeback
+        # + checkpoint + demand) the wfq/strict hybrid must cut demand p99
+        # queue delay >= 2x vs FIFO submission order...
+        ("congestion/mixed/summary", "x_demand_p99", ">=", 2.0),
+        # ...without giving up work conservation: aggregate virtual
+        # makespan stays within 10% of FIFO's
+        ("congestion/mixed/summary", "x_throughput", ">=", 0.9),
+        # back-pressure: a demand storm past the high watermark engages
+        # the throttle (prefetch admission is refused, visible in
+        # CacheStats), a quiet window releases it, and prefetch resumes
+        ("congestion/backpressure/summary", "throttle_ok", "==", 1.0),
+        # throttling only sheds optional work: demand gathers stay
+        # bit-identical with and without the watermark installed
+        ("congestion/backpressure/summary", "identical_ok", "==", 1.0),
+    ],
 }
 
 _OPS = {

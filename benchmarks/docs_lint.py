@@ -1,0 +1,90 @@
+"""Docs lint: the stream-class and CI-gate contracts must stay documented.
+
+Two contracts in this repo are load-bearing enough to deserve an
+enforced doc page:
+
+* the **stream-class taxonomy** (``repro.core.iostack.StreamClass``) —
+  which IO belongs to which class, who outranks whom, and what the
+  back-pressure watermarks do.  Documented in ``docs/streams.md``.
+* the **CI acceptance gates** (``benchmarks.check_gates.GATES``) — every
+  row/key a PR must clear, per bench suite.  Documented in
+  ``docs/benchmarks.md``.
+
+This lint fails when code outgrows those pages: add a StreamClass
+member or a gate without documenting it and CI goes red here, not in
+review three PRs later.  It also checks the three contract pages exist
+and are linked from the README.
+
+    PYTHONPATH=src python benchmarks/docs_lint.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from check_gates import GATES                      # noqa: E402
+from repro.core.iostack import StreamClass         # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: contract pages that must exist and be linked from the README
+PAGES = ("docs/architecture.md", "docs/streams.md", "docs/benchmarks.md")
+
+
+def _read(rel: str) -> str:
+    path = os.path.join(ROOT, rel)
+    if not os.path.exists(path):
+        return ""
+    with open(path) as fh:
+        return fh.read()
+
+
+def run() -> list:
+    failures = []
+
+    for rel in PAGES:
+        if not _read(rel):
+            failures.append(f"{rel}: missing or empty")
+    readme = _read("README.md")
+    for rel in PAGES:
+        if rel not in readme:
+            failures.append(f"README.md: no link to {rel}")
+
+    streams = _read("docs/streams.md")
+    for member in StreamClass:
+        if member.name not in streams:
+            failures.append(
+                f"docs/streams.md: StreamClass.{member.name} undocumented")
+
+    benches = _read("docs/benchmarks.md")
+    for bench, gates in sorted(GATES.items()):
+        if bench not in benches:
+            failures.append(f"docs/benchmarks.md: bench {bench!r} missing")
+        for row, key, _, _ in gates:
+            if row not in benches:
+                failures.append(
+                    f"docs/benchmarks.md: gate row {row!r} undocumented")
+            if key not in benches:
+                failures.append(
+                    f"docs/benchmarks.md: gate key {key!r} undocumented")
+
+    return failures
+
+
+def main() -> None:
+    failures = run()
+    if failures:
+        print(f"{len(failures)} docs-lint failure(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    n_members = len(list(StreamClass))
+    n_gates = sum(len(v) for v in GATES.values())
+    print(f"docs lint ok: {n_members} stream classes, {n_gates} CI gates, "
+          f"{len(PAGES)} contract pages linked from README")
+
+
+if __name__ == "__main__":
+    main()

@@ -897,6 +897,144 @@ def chaos():
          f"hedged={hedged};rerouted={rerouted}")
 
 
+def _qwait_p99(events, cls="DEMAND"):
+    """p99 queue delay (virtual s) over ``engine.sched_events`` rows of one
+    class: event = (stream, class, seq, v_submit, v_start, v_end, kind)."""
+    qs = sorted(v0 - vs for _, c, _, vs, v0, _, _ in events
+                if c == cls and vs is not None)
+    return qs[int(0.99 * (len(qs) - 1))] if qs else 0.0
+
+
+def _makespan(events):
+    return max((v1 for *_, v1, _ in events), default=0.0)
+
+
+def congestion():
+    """IO congestion control: five stream classes sharing the shard SQs
+    (docs/streams.md).
+
+    (a) mixed — one staged virtual arrival schedule (prefetch storm +
+        write-back + checkpoint at v=0, demand trickling in just behind)
+        replayed under the weighted-fair/strict-priority scheduler and
+        under the FIFO ablation.  WFQ must cut demand p99 queue delay
+        >= 2x vs FIFO (gate ``x_demand_p99``) while staying
+        work-conserving — aggregate virtual throughput >= 0.9x FIFO (gate
+        ``x_throughput``) — and demand bytes stay bit-identical across
+        policies even though writes reorder around reads (hazard checks).
+    (b) backpressure — a demand burst drives p99 queue delay over the
+        ``qwait_high_s`` watermark: prefetch admission throttles (cache
+        books ``throttled_skipped_rows``, engine books one engage), a
+        quiet window releases it (one release), and prefetch then
+        proceeds (gate ``throttle_ok``); the throttled run's demand
+        gathers are bit-identical to a watermark-disabled run (gate
+        ``identical_ok``).
+    """
+    from repro.core.iostack import StreamClass
+
+    rng = np.random.default_rng(5)
+    n_pf, pf_rows = (28, 512) if SMOKE else (56, 1024)
+    n_dem, dem_rows = (16, 128) if SMOKE else (32, 256)
+    store = FeatureStore(os.path.join(ROOT, "congestion"), n_rows=N_V,
+                         row_dim=256, n_shards=8, create=True, rng_seed=0,
+                         writable=True)
+    # disjoint id ranges per class: the mixed leg measures SCHEDULING, so
+    # cross-class hazards must not serialize it (writes land in their own
+    # ranges); demand ids overlap the write-back range on purpose below
+    dem_ids = [rng.integers(0, 8000, dem_rows) for _ in range(n_dem)]
+    pf_ids = [rng.integers(8000, 14000, pf_rows) for _ in range(n_pf)]
+    wb_ids = [np.arange(14000 + i * 256, 14000 + (i + 1) * 256)
+              for i in range(8)]
+    ck_ids = [np.arange(17000 + i * 256, 17000 + (i + 1) * 256)
+              for i in range(6)]
+    wb_rows = [rng.standard_normal((len(i), 256)).astype(np.float32)
+               for i in wb_ids]
+
+    def run_mixed(sched):
+        eng = AsyncIOEngine(store, chaos=None, sched=sched, sched_log=True)
+        eng.pause()
+        tks = []
+        # bulk classes all arrive at v=0 (the storm is already queued when
+        # demand shows up — the head-of-line case FIFO cannot help)
+        for ids, rows in zip(wb_ids, wb_rows):
+            tks.append(eng.submit_write(ids, rows, tag="flush", v_submit=0.0))
+        for ids, rows in zip(ck_ids, wb_rows[:len(ck_ids)]):
+            tks.append(eng.submit_write(ids, rows, tag="ckpt", v_submit=0.0))
+        for ids in pf_ids:
+            tks.append(eng.submit(ids, tag="prefetch", v_submit=0.0))
+        dem_tks = [eng.submit(ids, v_submit=(i + 1) * 1e-9)
+                   for i, ids in enumerate(dem_ids)]
+        eng.resume()
+        for tk in tks + dem_tks:
+            tk.wait()
+        eng.drain()
+        got = [tk.wait()[0] for tk in dem_tks]
+        ev = list(eng.sched_events)
+        by_class = {c: eng.stats.by_class.get(c, {})
+                    for c in ("DEMAND", "PREFETCH", "WRITEBACK",
+                              "CHECKPOINT")}
+        eng.close()
+        return ev, got, by_class
+
+    ev_w, got_w, bc = run_mixed("wfq")
+    ev_f, got_f, _ = run_mixed("fifo")
+    p99_w, p99_f = _qwait_p99(ev_w), _qwait_p99(ev_f)
+    mk_w, mk_f = _makespan(ev_w), _makespan(ev_f)
+    same = all(bool((a == b).all()) for a, b in zip(got_w, got_f))
+    emit("congestion/mixed/wfq", p99_w * 1e6,
+         f"demand_p99_us={p99_w * 1e6:.1f};makespan_us={mk_w * 1e6:.1f};"
+         f"demand_qwait_v={bc['DEMAND'].get('qwait_virtual_s', 0) * 1e6:.1f}")
+    emit("congestion/mixed/fifo", p99_f * 1e6,
+         f"demand_p99_us={p99_f * 1e6:.1f};makespan_us={mk_f * 1e6:.1f}")
+    emit("congestion/mixed/summary", 0.0,
+         f"x_demand_p99={p99_f / p99_w:.2f};"
+         f"x_throughput={mk_f / mk_w:.2f};"
+         f"identical_ok={float(same):.1f}")
+
+    # --- (b) backpressure: watermark engages, releases, stays inert ------
+    from repro.core.hetero_cache import HeteroCache
+
+    def run_storm(high):
+        eng = AsyncIOEngine(store, chaos=None, sched="wfq",
+                            qwait_high_s=high, sched_log=True)
+        cache = HeteroCache(store, None, 0, 1024, eng, fused=False)
+        # prefetch candidates must outscore the (zero-hotness) residents
+        # for the released-admission check to admit
+        cache.policy._scores[8000:9024] = 1.0
+        eng.pause()
+        storm = [eng.submit(ids, v_submit=0.0) for ids in dem_ids]
+        eng.resume()
+        got = [tk.wait()[0] for tk in storm]
+        eng.drain()
+        skipped_hot = 0
+        if eng.throttled(StreamClass.PREFETCH):
+            # optional admission defers while the watermark is engaged
+            assert cache.prefetch_rows(np.arange(8000, 9024)) is None
+            skipped_hot = cache.stats().throttled_skipped_rows
+        # quiet window: idle-arrival demand (zero queue delay, arrivals a
+        # full virtual second apart so one batch's service never queues
+        # the next) flushes the p99 window below the release watermark
+        for j in range(10):
+            eng.submit(dem_ids[0], v_submit=1.0 + j).wait()
+        released = not eng.throttled(StreamClass.PREFETCH)
+        pf_after = (cache.prefetch_rows(np.arange(8000, 9024))
+                    if released else None)
+        st = eng.stats.snapshot()
+        cache.close()
+        return got, skipped_hot, released, pf_after, st
+
+    got_t, skipped, released, pf_after, st = run_storm(2e-6)
+    got_u, _, _, _, _ = run_storm(None)
+    ident = all(bool((a == b).all()) for a, b in zip(got_t, got_u))
+    throttle_ok = (st.throttle_engaged == 1 and st.throttle_released == 1
+                   and skipped > 0 and released and pf_after is not None)
+    emit("congestion/backpressure/storm", 0.0,
+         f"engaged={st.throttle_engaged};released={st.throttle_released};"
+         f"skipped_rows={skipped}")
+    emit("congestion/backpressure/summary", 0.0,
+         f"throttle_ok={float(throttle_ok):.1f};"
+         f"identical_ok={float(ident):.1f}")
+
+
 # -- observability: SVG figure renderers (no plotting deps in CI) ----------
 
 _SVG_PALETTE = ("#4e79a7", "#f28e2b", "#e15759", "#76b7b2", "#59a14f",
@@ -1164,4 +1302,4 @@ def table1_datasets():
 ALL = [table1_datasets, fig7_iostack, fig5_end_to_end, fig6_inmem,
        fig8_cpu_cache_ssds, fig9_cpu_cache_dims, fig10_gpu_cache,
        fig11_pipeline, serve_slo, cache_policy, io_path, scale_out, chaos,
-       obs]
+       obs, congestion]

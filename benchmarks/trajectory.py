@@ -86,7 +86,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", required=True,
                     choices=("io_path", "cache_policy", "scale_out",
-                             "chaos", "obs"))
+                             "chaos", "obs", "congestion"))
     ap.add_argument("--mode", required=True, choices=("smoke", "full"))
     ap.add_argument("--json", required=True, dest="json_path",
                     help="fresh benchmark --json dump")

@@ -174,6 +174,18 @@ class CheckpointManager:
     # ------------------------------------------------------------------
     _EMB_INFLIGHT = 2                   # write tickets kept in flight
 
+    def _inflight_cap(self, eng) -> int:
+        """Checkpoint admission honors engine back-pressure: while the
+        engine's demand-qwait watermark is engaged
+        (``throttled(CHECKPOINT)`` — docs/streams.md), the in-flight
+        window shrinks to one ticket so checkpoint traffic trickles
+        instead of stacking the shard queues under a demand burst."""
+        from repro.core.iostack import StreamClass
+        thr = getattr(eng, "throttled", None)
+        if thr is not None and thr(StreamClass.CHECKPOINT):
+            return 1
+        return self._EMB_INFLIGHT
+
     @staticmethod
     def _file_crc(path: str) -> int:
         crc = 0
@@ -199,7 +211,7 @@ class CheckpointManager:
             ids = np.arange(lo, min(src.n_rows, lo + chunk_rows))
             dst_engine.submit_write(ids, src.read_rows(ids), tag="ckpt",
                                     cq=cq)
-            while cq.pending >= self._EMB_INFLIGHT:
+            while cq.pending >= self._inflight_cap(dst_engine):
                 virt += cq.pop().wait()[1]      # first-done, not FIFO head
         for tk in cq.drain():
             virt += tk.wait()[1]
@@ -227,7 +239,7 @@ class CheckpointManager:
         for lo in range(0, len(gids), chunk_rows):
             ids = gids[lo:lo + chunk_rows]
             eng.submit_write(ids, store.read_rows(ids), tag="ckpt", cq=cq)
-            while cq.pending >= self._EMB_INFLIGHT:
+            while cq.pending >= self._inflight_cap(eng):
                 virt += cq.pop().wait()[1]
         for tk in cq.drain():
             virt += tk.wait()[1]

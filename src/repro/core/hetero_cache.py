@@ -37,7 +37,8 @@ from dataclasses import dataclass, field, fields
 
 import numpy as np
 
-from repro.core.iostack import AsyncIOEngine, FeatureStore, keep_last_writer
+from repro.core.iostack import (AsyncIOEngine, FeatureStore, StreamClass,
+                                keep_last_writer)
 from repro.obs import trace as _trace
 from repro.core.policy import (CachePolicy, StaticPresamplePolicy,
                                patch_tables, tables_from_sets)
@@ -100,6 +101,10 @@ class CacheStats:
     # graceful degradation: prefetch rows suppressed because their shard
     # is marked degraded by the engine (demand gathers still serve them)
     degraded_skipped_rows: int = 0
+    # congestion back-pressure: prefetch rows deferred because the engine's
+    # demand-qwait watermark engaged (engine.throttled(PREFETCH) — see
+    # docs/streams.md); the rows stay candidates for the next window
+    throttled_skipped_rows: int = 0
     # locks the owning cache assigns (outer-to-inner order) so snapshot()
     # never reads a refresh()/complete_write mid-update
     _snap_locks: tuple = field(default=(), repr=False, compare=False)
@@ -1217,6 +1222,16 @@ class HeteroCache:
                             self.stats.degraded_skipped_rows += \
                                 int(drop.sum())
                         ids = ids[~drop]
+            thr = getattr(self.io, "throttled", None)
+            if thr is not None and len(ids) and thr(StreamClass.PREFETCH):
+                # congestion back-pressure: the engine's demand-qwait
+                # watermark is engaged, so optional prefetch admission
+                # defers entirely this window — demand and write-back
+                # traffic keep the queues, and the skip is stats-visible
+                # (rows stay candidates once the watermark releases)
+                with self._stats_lock:
+                    self.stats.throttled_skipped_rows += len(ids)
+                return None
             _, first = np.unique(ids, return_index=True)
             ids = ids[np.sort(first)]               # dedupe, keep ranking
             tier = ("host" if self.host_rows

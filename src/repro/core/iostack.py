@@ -24,13 +24,29 @@ Engines:
 
 Storage is memory-mapped shards; virtual IO time comes from the calibrated
 ``simulator`` so throughput ratios match the paper's hardware envelope.
+
+CONGESTION CONTROL (docs/streams.md is the written contract): every SQE
+batch carries a ``StreamClass`` and each shard's submission queue is a
+``ShardScheduler`` — a strict-priority head (DEMAND > REMOTE_DEMAND) over
+a weighted-fair bulk tail (WRITEBACK > CHECKPOINT > PREFETCH) instead of
+FIFO, with read/write hazard tracking so reordering never breaks the
+read-after-in-flight-write guarantee the split-phase write path relies
+on.  Virtual time is queue-delay-aware: a batch submitted with
+``v_submit`` completes at ``max(v_submit, shard_free) + service``, so a
+ticket's virtual time models waiting behind earlier-scheduled batches,
+not just its own service.  Demand-gather p99 queue delay crossing
+``qwait_high_s`` engages back-pressure (``throttled()``) that the cache
+and checkpoint streamer consult to throttle PREFETCH/CHECKPOINT
+admission until the delay falls back under ``qwait_low_s``.
 """
 from __future__ import annotations
 
+import enum
 import os
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field, fields
 
@@ -46,6 +62,63 @@ from repro.obs import trace as _trace
 # (see writeback.FlushJournal); named here because FeatureStore owns the
 # directory layout and must drop a stale journal when re-creating
 JOURNAL_FILE = "flush.journal"
+
+
+# ---------------------------------------------------------------------------
+# Stream classes: the QoS contract every engine's shard SQs implement
+# ---------------------------------------------------------------------------
+
+class StreamClass(enum.IntEnum):
+    """Priority-ordered IO stream classes (lower value = higher priority).
+
+    DEMAND and REMOTE_DEMAND are strict-priority: a queued demand batch is
+    always scheduled before any bulk batch that has also arrived.  The
+    bulk tail (WRITEBACK, CHECKPOINT, PREFETCH) shares leftover service
+    weighted-fair by ``DEFAULT_CLASS_WEIGHTS``, so background streams make
+    progress in proportion without starving each other.  The taxonomy,
+    emitter map, and back-pressure watermarks are documented in
+    docs/streams.md.
+    """
+
+    DEMAND = 0          # blocking gathers: trainer batches, serving misses
+    REMOTE_DEMAND = 1   # peer-owned legs of a demand gather (remote tier)
+    WRITEBACK = 2       # dirty-row flush/demote/write-through/combiner
+    CHECKPOINT = 3      # embedding checkpoint streaming (save/restore)
+    PREFETCH = 4        # policy prefetch + refresh tier migration
+
+
+#: classes scheduled strict-priority ahead of the weighted-fair bulk tail
+STRICT_CLASSES = (StreamClass.DEMAND, StreamClass.REMOTE_DEMAND)
+
+#: weighted-fair shares for the bulk tail (normalized service / weight)
+DEFAULT_CLASS_WEIGHTS = {StreamClass.WRITEBACK: 4.0,
+                         StreamClass.CHECKPOINT: 2.0,
+                         StreamClass.PREFETCH: 1.0}
+
+#: submit ``tag`` -> stream class, for call sites that only pass a tag
+#: (an explicit ``sclass=`` always wins; unknown tags default to DEMAND —
+#: unlabelled traffic must never be silently deprioritized)
+STREAM_TAGS = {
+    "": StreamClass.DEMAND,
+    "rmw": StreamClass.DEMAND,
+    "invalidate": StreamClass.DEMAND,
+    "remote": StreamClass.REMOTE_DEMAND,
+    "write": StreamClass.WRITEBACK,
+    "flush": StreamClass.WRITEBACK,
+    "flush-demote": StreamClass.WRITEBACK,
+    "flush-combine": StreamClass.WRITEBACK,
+    "ckpt": StreamClass.CHECKPOINT,
+    "prefetch": StreamClass.PREFETCH,
+    "refresh": StreamClass.PREFETCH,
+}
+
+
+def stream_class_of(tag: str, sclass: StreamClass | None = None):
+    """Resolve a submission's stream class: explicit ``sclass`` wins, else
+    the tag map, else DEMAND."""
+    if sclass is not None:
+        return StreamClass(sclass)
+    return STREAM_TAGS.get(tag, StreamClass.DEMAND)
 
 
 # ---------------------------------------------------------------------------
@@ -297,6 +370,14 @@ class IOStats:
     virtual_backoff_s: float = 0.0      # virtual seconds spent backing off
     hedged_reads: int = 0               # peer batches rerouted post-timeout
     degraded_events: int = 0            # streams newly marked degraded
+    # congestion-control accounting (ShardScheduler + back-pressure)
+    throttle_engaged: int = 0           # demand-p99 watermark crossings up
+    throttle_released: int = 0          # hysteresis releases back down
+    # per-stream-class breakdown: additive sub-dict keyed by StreamClass
+    # NAME -> counter dict (requests/bytes/virt/qwait...).  Existing public
+    # keys are untouched — snapshot()/delta() carry it alongside, and the
+    # scalar fields above remain the class-summed totals
+    by_class: dict = field(default_factory=dict, repr=False, compare=False)
     # engine lock, assigned by the owning engine so snapshot() is atomic
     # with respect to in-flight completions (excluded from repr/compare)
     _lock: object = field(default=None, repr=False, compare=False)
@@ -308,9 +389,27 @@ class IOStats:
         return (self.write_bytes / self.virtual_write_s
                 if self.virtual_write_s else 0.0)
 
+    # counters each by_class bucket carries (mirrors of the scalar fields)
+    _CLASS_COUNTERS = ("requests", "bytes", "batches", "virtual_io_s",
+                       "write_requests", "write_bytes", "write_batches",
+                       "virtual_write_s", "qwait_virtual_s", "qwait_batches")
+
+    def _bucket(self, name: str) -> dict:
+        """Get-or-create the per-stream-class counter sub-dict.  Callers
+        mutate it under the owning engine's lock, like the scalar fields."""
+        d = self.by_class.get(name)
+        if d is None:
+            d = self.by_class[name] = dict.fromkeys(self._CLASS_COUNTERS, 0)
+        return d
+
     def _values(self) -> dict:
         return {f.name: getattr(self, f.name) for f in fields(self)
-                if not f.name.startswith("_")}
+                if not f.name.startswith("_") and f.name != "by_class"}
+
+    def _copy(self) -> "IOStats":
+        s = IOStats(**self._values())
+        s.by_class = {c: dict(d) for c, d in self.by_class.items()}
+        return s
 
     def snapshot(self) -> "IOStats":
         """Point-in-time copy, taken under the owning engine's lock (when
@@ -318,25 +417,38 @@ class IOStats:
         lk = self._lock
         if lk is not None:
             with lk:
-                return IOStats(**self._values())
-        return IOStats(**self._values())
+                return self._copy()
+        return self._copy()
 
     def delta(self, since: "IOStats") -> "IOStats":
         """Field-wise ``self - since`` over a fresh snapshot — what benches
-        use instead of hand-subtracting counter dicts."""
-        cur = self.snapshot()._values()
+        use instead of hand-subtracting counter dicts.  The ``by_class``
+        sub-dict subtracts bucket-wise (missing buckets count as zero)."""
+        cur = self.snapshot()
         base = since._values()
-        return IOStats(**{k: v - base[k] for k, v in cur.items()})
+        out = IOStats(**{k: v - base.get(k, 0)
+                         for k, v in cur._values().items()})
+        for c in cur.by_class.keys() | since.by_class.keys():
+            a = cur.by_class.get(c, {})
+            b = since.by_class.get(c, {})
+            out.by_class[c] = {k: a.get(k, 0) - b.get(k, 0)
+                               for k in a.keys() | b.keys()}
+        return out
 
     def publish(self, prefix: str = "io", registry=None) -> None:
         """Publish every counter (plus derived bandwidths) into the obs
-        metrics registry as gauges, without touching the public fields."""
+        metrics registry as gauges, without touching the public fields.
+        Per-class buckets publish under ``<prefix>.class.<CLASS>.<key>``."""
         from repro.obs.metrics import REGISTRY
         reg = registry if registry is not None else REGISTRY
-        for k, v in self.snapshot()._values().items():
+        snap = self.snapshot()
+        for k, v in snap._values().items():
             reg.gauge(f"{prefix}.{k}").set(v)
         reg.gauge(f"{prefix}.bw").set(self.bw())
         reg.gauge(f"{prefix}.write_bw").set(self.write_bw())
+        for c, d in snap.by_class.items():
+            for k, v in d.items():
+                reg.gauge(f"{prefix}.class.{c}.{k}").set(v)
 
 
 def coalesce_offsets(offsets: np.ndarray, gap: int):
@@ -392,6 +504,211 @@ def pick_coalesce_gap(offsets: np.ndarray, max_gap: int = 64,
     return int(uniq[ok][-1]) if ok.any() else 0
 
 
+def _overlaps(a: np.ndarray, b: np.ndarray) -> bool:
+    """True when two SORTED int arrays share any value (hazard check)."""
+    if not len(a) or not len(b):
+        return False
+    i = np.searchsorted(a, b)
+    i[i == len(a)] = len(a) - 1
+    return bool((a[i] == b).any())
+
+
+class _SQE:
+    """One shard submission-queue entry (a class-tagged batch)."""
+
+    __slots__ = ("seq", "kind", "sclass", "v_submit", "offs", "offs_sorted",
+                 "payload", "comp", "t_enq", "v_start")
+
+    def __init__(self, kind, offs, payload, comp, t_enq, sclass, v_submit):
+        self.kind = kind                # "r" read | "w" write
+        self.offs = offs
+        self.offs_sorted = np.sort(offs)
+        self.payload = payload
+        self.comp = comp
+        self.t_enq = t_enq
+        self.sclass = sclass
+        self.v_submit = v_submit        # virtual arrival (None = legacy)
+        self.seq = -1                   # assigned by the scheduler
+        self.v_start = 0.0              # assigned at pop
+
+
+class ShardScheduler:
+    """Class-aware submission queue for ONE shard (or one remote peer).
+
+    Replaces the per-shard FIFO ``queue.Queue``: batches queue FIFO within
+    their ``StreamClass``, and the scheduler picks which class's head to
+    service next — strict priority for DEMAND/REMOTE_DEMAND, weighted-fair
+    (least normalized service, ``weights``) across the bulk tail, or pure
+    arrival order with ``policy="fifo"`` (the congestion-bench baseline).
+
+    HAZARDS: reordering across classes must not break the shard's
+    read-after-in-flight-write guarantee, so a head is only schedulable
+    when no earlier-enqueued batch conflicts with it (offset overlap where
+    at least one side is a write).  The globally-oldest queued batch never
+    has an earlier conflict, so at least one head is always schedulable —
+    the scheduler cannot deadlock, and within one class FIFO order is
+    preserved exactly.
+
+    QUEUE-DELAY-AWARE VIRTUAL TIME: the shard keeps a virtual busy-until
+    clock ``v_free``.  A batch submitted with a virtual arrival stamp
+    ``v_submit`` starts at ``max(v_free, v_submit)`` and pushes ``v_free``
+    by its service time, so its completion models waiting behind every
+    earlier-scheduled batch at this shard (and the scheduler is
+    event-driven: a head that has not virtually arrived yet is not chosen
+    while an arrived one exists).  Batches without ``v_submit`` are priced
+    as arriving exactly when the shard frees up — zero modeled queue
+    delay, the pre-congestion-control accounting, so existing callers see
+    identical virtual times.
+    """
+
+    def __init__(self, policy: str = "wfq", weights: dict | None = None):
+        if policy not in ("wfq", "fifo"):
+            raise ValueError(f"unknown scheduler policy {policy!r}")
+        self.policy = policy
+        self.weights = dict(DEFAULT_CLASS_WEIGHTS)
+        if weights:
+            self.weights.update(weights)
+        self._q = {c: deque() for c in StreamClass}
+        self._pending = {}              # seq -> _SQE, ascending-seq order
+        self._n_writes = 0
+        self._seq = 0
+        self.v_free = 0.0               # virtual time the shard frees up
+        self._served = dict.fromkeys(StreamClass, 0.0)
+        self._lk = threading.Lock()
+
+    def put(self, sqe: _SQE) -> None:
+        with self._lk:
+            sqe.seq = self._seq
+            self._seq += 1
+            self._q[sqe.sclass].append(sqe)
+            self._pending[sqe.seq] = sqe
+            if sqe.kind == "w":
+                self._n_writes += 1
+
+    def _blocked(self, e: _SQE) -> bool:
+        """An earlier-enqueued, not-yet-serviced batch conflicts with
+        ``e`` (RAW/WAR/WAW at offset granularity)."""
+        if e.kind == "r" and self._n_writes == 0:
+            return False                # read-only backlog: nothing to hit
+        for p in self._pending.values():        # ascending seq
+            if p.seq >= e.seq:
+                return False
+            if p.kind == "r" and e.kind == "r":
+                continue
+            if _overlaps(p.offs_sorted, e.offs_sorted):
+                return True
+        return False
+
+    def _vs(self, e: _SQE) -> float:
+        return e.v_submit if e.v_submit is not None else self.v_free
+
+    def pop(self) -> _SQE | None:
+        """Choose and dequeue the next batch (None when empty).  Called
+        under the shard's service lock, so at most one batch of this shard
+        is in service and ``v_free`` is stable until ``complete()``."""
+        with self._lk:
+            heads = [q[0] for q in self._q.values() if q]
+            if not heads:
+                return None
+            free = [h for h in heads if not self._blocked(h)]
+            # event-driven "now": never idle while an arrived batch waits,
+            # never pull a future arrival ahead of the virtual clock
+            now = max(self.v_free, min(self._vs(h) for h in free))
+            cands = [h for h in free if self._vs(h) <= now]
+            if self.policy == "fifo":
+                best = min(cands, key=lambda h: (self._vs(h), h.seq))
+            else:
+                strict = [h for h in cands if h.sclass in STRICT_CLASSES]
+                if strict:
+                    best = min(strict, key=lambda h: (h.sclass, h.seq))
+                else:
+                    best = min(cands, key=lambda h: (
+                        self._served[h.sclass] / self.weights.get(h.sclass,
+                                                                  1.0),
+                        h.seq))
+            self._q[best.sclass].popleft()
+            best.v_start = max(self.v_free, self._vs(best))
+            return best
+
+    def complete(self, e: _SQE, svc_virt: float):
+        """Book a serviced batch: advance the shard's virtual clock, charge
+        the class's fair-share account, release its hazards.  Returns
+        ``(v_start, v_end, qwait_virtual)``."""
+        with self._lk:
+            v_end = e.v_start + svc_virt
+            self.v_free = v_end
+            self._served[e.sclass] += svc_virt
+            del self._pending[e.seq]
+            if e.kind == "w":
+                self._n_writes -= 1
+        q = e.v_start - e.v_submit if e.v_submit is not None else 0.0
+        return e.v_start, v_end, q
+
+    def __len__(self) -> int:
+        with self._lk:
+            return len(self._pending)
+
+
+def _sched_init(eng, n_streams: int, sched: str, class_weights,
+                qwait_high_s, qwait_low_s, sched_log: bool) -> list:
+    """Shared congestion-control state for the striped engines (local
+    shards and remote peers alike): per-stream schedulers, per-class qwait
+    histograms, the demand-delay window, and the back-pressure hysteresis
+    state.  Returns the scheduler list."""
+    eng.sched = sched
+    eng.qwait_high_s = qwait_high_s
+    eng.qwait_low_s = (qwait_low_s if qwait_low_s is not None else
+                       (qwait_high_s / 2.0 if qwait_high_s is not None
+                        else None))
+    eng.sched_log = sched_log
+    eng.sched_events = []               # (stream, class, seq, vs, v0, v1, k)
+    eng._qwait_hist = {}                # class name -> obs Histogram
+    eng._demand_win = deque(maxlen=64)  # recent demand qwaits (virtual s)
+    eng._throttle_on = False
+    return [ShardScheduler(sched, class_weights) for _ in range(n_streams)]
+
+
+def _note_qwait(eng, stream: int, sqe: _SQE, v_start: float, v_end: float,
+                qwait_v: float) -> None:
+    """Book one scheduled batch's queue delay: per-class stats bucket +
+    histogram, the optional scheduling log, and the demand-p99 watermark
+    (back-pressure engages when p99 over the recent window crosses
+    ``qwait_high_s`` and releases under ``qwait_low_s`` — deterministic
+    given the completion sequence)."""
+    name = sqe.sclass.name
+    flip = None
+    with eng._lock:
+        b = eng.stats._bucket(name)
+        b["qwait_virtual_s"] += qwait_v
+        b["qwait_batches"] += 1
+        if eng.sched_log:
+            eng.sched_events.append((stream, name, sqe.seq, sqe.v_submit,
+                                     v_start, v_end, sqe.kind))
+        h = eng._qwait_hist.get(name)
+        if h is None:
+            from repro.obs.metrics import Histogram
+            h = eng._qwait_hist[name] = Histogram(f"io.qwait.{name}")
+        if (eng.qwait_high_s is not None and sqe.v_submit is not None
+                and sqe.sclass in STRICT_CLASSES):
+            win = eng._demand_win
+            win.append(qwait_v)
+            p99 = sorted(win)[int(0.99 * (len(win) - 1))]
+            if not eng._throttle_on and p99 > eng.qwait_high_s:
+                eng._throttle_on = True
+                eng.stats.throttle_engaged += 1
+                flip = ("io.throttle.engage", p99)
+            elif eng._throttle_on and p99 < eng.qwait_low_s:
+                eng._throttle_on = False
+                eng.stats.throttle_released += 1
+                flip = ("io.throttle.release", p99)
+    h.observe(qwait_v)
+    if flip is not None:
+        tr = _trace.TRACER
+        if tr is not None and tr.enabled:
+            tr.instant(flip[0], track="congestion", cat="io",
+                       args={"demand_p99_v": flip[1], "stream": stream})
+
+
 class _ShardedCompletion:
     """Aggregates per-shard completions of one striped request batch.
 
@@ -410,7 +727,8 @@ class _ShardedCompletion:
 
     __slots__ = ("engine", "fut", "data", "pending", "max_virt", "ranges",
                  "span_bytes", "wall", "exc", "done_shards",
-                 "failed_shards", "kind", "_lk", "t0w", "psid", "tag")
+                 "failed_shards", "kind", "_lk", "t0w", "psid", "tag",
+                 "sclass", "qwait_virt")
 
     def __init__(self, engine, fut: Future, data, pending: int,
                  kind: str = "r"):
@@ -430,14 +748,17 @@ class _ShardedCompletion:
         self.t0w = 0.0                  # tracing: submit wall time (abs)
         self.psid = None                # tracing: submit span id (parent)
         self.tag = ""
+        self.sclass = StreamClass.DEMAND
+        self.qwait_virt = 0.0           # summed modeled queue delay
 
     def shard_done(self, virt: float, n_ranges: int, span_bytes: int,
-                   wall: float):
+                   wall: float, qwait: float = 0.0):
         with self._lk:
             self.max_virt = max(self.max_virt, virt)
             self.ranges += n_ranges
             self.span_bytes += span_bytes
             self.wall += wall
+            self.qwait_virt += qwait
             self.done_shards += 1
             self.pending -= 1
             last = self.pending == 0
@@ -458,16 +779,19 @@ class _ShardedCompletion:
         eng = self.engine
         virt = max(self.max_virt, self.span_bytes / eng.env.pcie_bw)
         with eng._lock:
+            b = eng.stats._bucket(self.sclass.name)
             if self.kind == "w":
                 eng.stats.virtual_write_s += virt
                 eng.stats.wall_complete_s += self.wall
                 eng.stats.write_ranges += self.ranges
                 eng.stats.write_span_bytes += self.span_bytes
+                b["virtual_write_s"] += virt
             else:
                 eng.stats.virtual_io_s += virt
                 eng.stats.wall_complete_s += self.wall
                 eng.stats.ranges += self.ranges
                 eng.stats.span_bytes += self.span_bytes
+                b["virtual_io_s"] += virt
         tr = _trace.TRACER
         if tr is not None and tr.enabled and self.t0w:
             tr.record(f"io.ticket.{'write' if self.kind == 'w' else 'read'}",
@@ -477,7 +801,8 @@ class _ShardedCompletion:
                             "span_bytes": self.span_bytes,
                             "shards": self.done_shards,
                             "failed_shards": self.failed_shards,
-                            "tag": self.tag})
+                            "tag": self.tag, "sclass": self.sclass.name,
+                            "qwait_virt_s": self.qwait_virt})
         if self.exc is not None:
             self.exc.completed_shards = self.done_shards
             self.exc.failed_shards = self.failed_shards
@@ -594,7 +919,11 @@ class AsyncIOEngine:
                  max_coalesce_gap: int = 64, amp_cap: float = 1.5,
                  chaos: ChaosSchedule | None | str = "env",
                  retry: RetryPolicy | None = None,
-                 degrade_after: int = 3):
+                 degrade_after: int = 3,
+                 sched: str = "wfq", class_weights: dict | None = None,
+                 qwait_high_s: float | None = None,
+                 qwait_low_s: float | None = None,
+                 sched_log: bool = False):
         self.store = store
         self.env = env
         self.model = ArrayModel(store.n_shards, env)
@@ -632,10 +961,16 @@ class AsyncIOEngine:
         # split-phase write path relies on (a read submitted after a write
         # must observe it)
         self._legacy_lk = threading.Lock()
-        # striped path: one submission queue per shard + a ready queue of
-        # shard tokens (one per SQE batch) that the bounded workers pop
-        self._sqs = [queue.Queue() for _ in range(store.n_shards)]
+        # striped path: one class-aware submission scheduler per shard + a
+        # ready queue of shard tokens (one per SQE batch) that the bounded
+        # workers pop; the scheduler replaces the former FIFO queue.Queue
+        # (strict priority for demand, weighted-fair bulk, hazard-checked —
+        # see ShardScheduler and docs/streams.md)
+        self._schedulers = _sched_init(self, store.n_shards, sched,
+                                       class_weights, qwait_high_s,
+                                       qwait_low_s, sched_log)
         self._ready: queue.Queue = queue.Queue()
+        self._paused = False            # pause()/resume(): stage arrivals
         # one completion queue per shard: a serviced SQE batch posts its
         # CQE here and the servicing worker reaps it into the ticket, so
         # each shard's completions progress independently of every other
@@ -659,13 +994,16 @@ class AsyncIOEngine:
     # -- submission (returns immediately: nothing waits on the device) ----
     def submit(self, ids: np.ndarray, out: np.ndarray | None = None,
                dest: np.ndarray | None = None, tag: str = "",
-               cq: CompletionQueue | None = None) -> IOTicket:
+               cq: CompletionQueue | None = None,
+               sclass: StreamClass | None = None,
+               v_submit: float | None = None) -> IOTicket:
         fut: Future = Future()
         t0 = time.perf_counter()
         ids = np.asarray(ids)
         nbytes = len(ids) * self.store.row_bytes
+        sc = stream_class_of(tag, sclass)
         if not self.striped:
-            self._sq.put(("r", ids, out, dest, fut, t0))
+            self._sq.put(("r", ids, out, dest, fut, t0, sc))
             tk = IOTicket(fut, len(ids), nbytes,
                           time.perf_counter() - t0, tag, shards=1)
             with self._lock:
@@ -673,6 +1011,10 @@ class AsyncIOEngine:
                 self.stats.bytes += nbytes
                 self.stats.wall_submit_s += tk.submit_wall
                 self.stats.batches += 1
+                b = self.stats._bucket(sc.name)
+                b["requests"] += len(ids)
+                b["bytes"] += nbytes
+                b["batches"] += 1
             if cq is not None:
                 cq.add(tk)
             return tk
@@ -685,6 +1027,7 @@ class AsyncIOEngine:
                     else np.arange(len(ids)))
         sid, off = self.store.locate(ids)
         comp = _ShardedCompletion(self, fut, buf if out is None else None, 0)
+        comp.sclass = sc
         batches = []
         for s in range(self.store.n_shards):
             m = sid == s
@@ -701,27 +1044,34 @@ class AsyncIOEngine:
         else:
             comp.pending = len(batches)
             for s, offs, d in batches:
-                self._sqs[s].put(("r", offs, (d, buf), comp, t0))
+                self._schedulers[s].put(
+                    _SQE("r", offs, (d, buf), comp, t0, sc, v_submit))
                 self._ready.put(s)
         tk.submit_wall = time.perf_counter() - t0
         if tr is not None and tr.enabled:
             tr.record("io.submit.read", t0, time.perf_counter(),
                       track="submit", cat="io", parent=comp.psid,
                       args={"rows": len(ids), "shards": len(batches),
-                            "tag": tag})
+                            "tag": tag, "sclass": sc.name})
         with self._lock:
             self.stats.requests += len(ids)
             self.stats.bytes += nbytes
             self.stats.wall_submit_s += tk.submit_wall
             self.stats.batches += 1
             self.stats.shard_batches += len(batches)
+            b = self.stats._bucket(sc.name)
+            b["requests"] += len(ids)
+            b["bytes"] += nbytes
+            b["batches"] += 1
         if cq is not None:
             cq.add(tk)
         return tk
 
     def submit_write(self, ids: np.ndarray, rows: np.ndarray,
                      tag: str = "",
-                     cq: CompletionQueue | None = None) -> IOTicket:
+                     cq: CompletionQueue | None = None,
+                     sclass: StreamClass | None = None,
+                     v_submit: float | None = None) -> IOTicket:
         """``submit()`` mirror for the WRITE path: per-shard striped SQE
         write batches, range-coalesced sequential writes, one aggregating
         ticket.  Duplicate ids resolve last-writer-wins BEFORE striping, so
@@ -739,8 +1089,9 @@ class AsyncIOEngine:
                              f"({len(ids)}, {self.store.row_dim})")
         ids, rows = keep_last_writer(ids, rows)
         nbytes = len(ids) * self.store.row_bytes
+        sc = stream_class_of(tag if tag else "write", sclass)
         if not self.striped:
-            self._sq.put(("w", ids, rows, None, fut, t0))
+            self._sq.put(("w", ids, rows, None, fut, t0, sc))
             tk = IOTicket(fut, len(ids), nbytes,
                           time.perf_counter() - t0, tag, shards=1)
             with self._lock:
@@ -748,12 +1099,17 @@ class AsyncIOEngine:
                 self.stats.write_bytes += nbytes
                 self.stats.wall_submit_s += tk.submit_wall
                 self.stats.write_batches += 1
+                b = self.stats._bucket(sc.name)
+                b["write_requests"] += len(ids)
+                b["write_bytes"] += nbytes
+                b["write_batches"] += 1
             if cq is not None:
                 cq.add(tk)
             return tk
 
         sid, off = self.store.locate(ids)
         comp = _ShardedCompletion(self, fut, None, 0, kind="w")
+        comp.sclass = sc
         batches = []
         for s in range(self.store.n_shards):
             m = sid == s
@@ -770,20 +1126,25 @@ class AsyncIOEngine:
         else:
             comp.pending = len(batches)
             for s, offs, data in batches:
-                self._sqs[s].put(("w", offs, data, comp, t0))
+                self._schedulers[s].put(
+                    _SQE("w", offs, data, comp, t0, sc, v_submit))
                 self._ready.put(s)
         tk.submit_wall = time.perf_counter() - t0
         if tr is not None and tr.enabled:
             tr.record("io.submit.write", t0, time.perf_counter(),
                       track="submit", cat="io", parent=comp.psid,
                       args={"rows": len(ids), "shards": len(batches),
-                            "tag": tag})
+                            "tag": tag, "sclass": sc.name})
         with self._lock:
             self.stats.write_requests += len(ids)
             self.stats.write_bytes += nbytes
             self.stats.wall_submit_s += tk.submit_wall
             self.stats.write_batches += 1
             self.stats.write_shard_batches += len(batches)
+            b = self.stats._bucket(sc.name)
+            b["write_requests"] += len(ids)
+            b["write_bytes"] += nbytes
+            b["write_batches"] += 1
         if cq is not None:
             cq.add(tk)
         return tk
@@ -886,10 +1247,19 @@ class AsyncIOEngine:
                 s = self._ready.get(timeout=0.1)
             except queue.Empty:
                 continue
-            # per-shard FIFO service: one worker drains a given shard's SQ
-            # at a time (its batches land in submission order — the
-            # read-after-write guarantee the split-phase write path needs),
-            # while OTHER shards proceed in parallel on other workers.  On
+            # paused engine: callers are staging a full arrival schedule so
+            # the scheduler sees every competing batch before choosing —
+            # hand the token back until resume()
+            if self._paused:
+                self._ready.put(s)
+                self._ready.task_done()
+                time.sleep(2e-4)
+                continue
+            # class-aware per-shard service: one worker drains a given
+            # shard's scheduler at a time — the scheduler (not FIFO) picks
+            # which class's head runs, while its hazard checks keep the
+            # read-after-write guarantee the split-phase write path needs;
+            # OTHER shards proceed in parallel on other workers.  On
             # contention the token goes back and the worker moves on.
             if not self._shard_lk[s].acquire(blocking=False):
                 self._ready.put(s)
@@ -897,36 +1267,53 @@ class AsyncIOEngine:
                 time.sleep(2e-4)        # don't spin hot on one busy shard
                 continue
             try:
-                try:
-                    kind, offs, payload, comp, t_enq = \
-                        self._sqs[s].get_nowait()
-                except queue.Empty:     # pragma: no cover - token per entry
+                sqe = self._schedulers[s].pop()
+                if sqe is None:         # pragma: no cover - token per entry
                     continue
+                comp = sqe.comp
                 try:
                     t0 = time.perf_counter()
-                    if kind == "w":
-                        out = self._service_shard_write(s, offs, payload)
+                    if sqe.kind == "w":
+                        out = self._service_shard_write(s, sqe.offs,
+                                                        sqe.payload)
                     else:
-                        d, buf = payload
-                        out = self._service_shard(s, offs, d, buf)
+                        d, buf = sqe.payload
+                        out = self._service_shard(s, sqe.offs, d, buf)
                     t1 = time.perf_counter()
-                    self._cqs[s].put((comp, (*out, t1 - t0)))
+                    v0, v1, qwait_v = self._schedulers[s].complete(sqe,
+                                                                   out[0])
+                    _note_qwait(self, s, sqe, v0, v1, qwait_v)
+                    # queue-delay-aware virtual time: with an explicit
+                    # virtual arrival the shard leg is priced from arrival
+                    # to virtual completion (waiting behind every
+                    # earlier-scheduled batch); without one, service only —
+                    # the pre-congestion-control accounting
+                    leg_virt = (v1 - sqe.v_submit
+                                if sqe.v_submit is not None else out[0])
+                    self._cqs[s].put(
+                        (comp, (leg_virt, out[1], out[2], t1 - t0, qwait_v)))
                     tr = _trace.TRACER
                     if tr is not None and tr.enabled:
                         psid = getattr(comp, "psid", None)
-                        tr.record("io.qwait", t_enq, t0, track=f"ssd{s}/q",
+                        tr.record("io.qwait", sqe.t_enq, t0,
+                                  track=f"ssd{s}/q",
                                   cat="io", parent=psid,
-                                  args={"shard": s, "kind": kind})
-                        tr.record(f"io.service.{kind}", t0, t1,
+                                  args={"shard": s, "kind": sqe.kind,
+                                        "sclass": sqe.sclass.name,
+                                        "qwait_virt_s": qwait_v})
+                        tr.record(f"io.service.{sqe.kind}", t0, t1,
                                   track=f"ssd{s}", cat="io", parent=psid,
                                   args={"shard": s, "virt_s": out[0],
                                         "ranges": out[1],
-                                        "span_bytes": out[2]})
+                                        "span_bytes": out[2],
+                                        "sclass": sqe.sclass.name})
                 except Exception as e:
                     # errored CQE: the owning ticket gets the exception
                     # (via shard_fail) and the worker stays alive to
                     # service the next SQE batch — a service fault must
-                    # never kill the thread silently
+                    # never kill the thread silently.  The scheduler entry
+                    # still completes (zero service) so its hazards release
+                    self._schedulers[s].complete(sqe, 0.0)
                     self._cqs[s].put((comp, e))
             finally:
                 self._shard_lk[s].release()
@@ -951,7 +1338,7 @@ class AsyncIOEngine:
             if not self._legacy_lk.acquire(timeout=0.1):
                 continue
             try:
-                kind, ids, a, b, fut, t_enq = self._sq.get(timeout=0.1)
+                kind, ids, a, b, fut, t_enq, sc = self._sq.get(timeout=0.1)
             except queue.Empty:
                 self._legacy_lk.release()
                 continue
@@ -983,6 +1370,8 @@ class AsyncIOEngine:
                     with self._lock:
                         self.stats.virtual_write_s += virt
                         self.stats.wall_complete_s += t1 - t0
+                        self.stats._bucket(sc.name)["virtual_write_s"] += \
+                            virt
                     tr = _trace.TRACER
                     if tr is not None and tr.enabled:
                         tr.record("io.qwait", t_enq, t0, track="legacy/q",
@@ -1014,6 +1403,7 @@ class AsyncIOEngine:
                     with self._lock:
                         self.stats.virtual_io_s += virt
                         self.stats.wall_complete_s += t1 - t0
+                        self.stats._bucket(sc.name)["virtual_io_s"] += virt
                     tr = _trace.TRACER
                     if tr is not None and tr.enabled:
                         tr.record("io.qwait", t_enq, t0, track="legacy/q",
@@ -1034,6 +1424,35 @@ class AsyncIOEngine:
                 # pairs with drain()'s Queue.join(): the item only counts
                 # as done once its read landed and its future resolved
                 self._sq.task_done()
+
+    # -- congestion control: admission pause + back-pressure signal -------
+    def pause(self):
+        """Hold service: workers requeue ready tokens until ``resume()``.
+        Lets callers (benches, tests) stage a full virtual arrival
+        schedule so the scheduler's choices are a pure function of the
+        staged batches — no wall-clock races."""
+        self._paused = True
+
+    def resume(self):
+        self._paused = False
+
+    def throttled(self, sclass: StreamClass = StreamClass.PREFETCH) -> bool:
+        """Back-pressure signal for bulk admission: True while demand-class
+        p99 queue delay (over the recent window) sits above
+        ``qwait_high_s`` and has not yet fallen below ``qwait_low_s``.
+        Only PREFETCH and CHECKPOINT admission honors it — demand,
+        remote-demand, and write-back (correctness) traffic never
+        throttles."""
+        if sclass not in (StreamClass.PREFETCH, StreamClass.CHECKPOINT):
+            return False
+        return self._throttle_on
+
+    def qwait_summary(self) -> dict:
+        """Per-class queue-delay histogram summaries (virtual seconds),
+        keyed by StreamClass name."""
+        with self._lock:
+            hists = dict(self._qwait_hist)
+        return {name: h.summary() for name, h in hists.items()}
 
     # -- degraded-shard introspection (graceful degradation) --------------
     def degraded_shards(self) -> np.ndarray:
@@ -1140,10 +1559,26 @@ class SyncIOEngine:
         """Host-side staging overhead (none for the GPU-managed baseline)."""
         return 0.0
 
+    # -- congestion-control API parity (no queues: nothing to schedule) ---
+    def pause(self):
+        pass
+
+    def resume(self):
+        pass
+
+    def throttled(self, sclass: "StreamClass | None" = None) -> bool:
+        return False                    # coupled path: no back-pressure
+
+    def qwait_summary(self) -> dict:
+        return {}                       # coupled path: zero queue delay
+
     def submit(self, ids: np.ndarray, out: np.ndarray | None = None,
                dest: np.ndarray | None = None, tag: str = "",
-               cq: CompletionQueue | None = None) -> IOTicket:
+               cq: CompletionQueue | None = None,
+               sclass: StreamClass | None = None,
+               v_submit: float | None = None) -> IOTicket:
         t0 = time.perf_counter()
+        sc = stream_class_of(tag, sclass)
         box = {}
 
         def time_fn(attempt, hedged):
@@ -1174,6 +1609,11 @@ class SyncIOEngine:
         self.stats.virtual_io_s += virt
         self.stats.wall_complete_s += wall
         self.stats.batches += 1
+        b = self.stats._bucket(sc.name)
+        b["requests"] += len(ids)
+        b["bytes"] += len(ids) * self.store.row_bytes
+        b["batches"] += 1
+        b["virtual_io_s"] += virt
         fut: Future = Future()
         # the ticket resolves with the SAME virtual seconds the engine
         # accounted — downstream (cache stats) must agree with engine stats
@@ -1186,10 +1626,13 @@ class SyncIOEngine:
 
     def submit_write(self, ids: np.ndarray, rows: np.ndarray,
                      tag: str = "",
-                     cq: CompletionQueue | None = None) -> IOTicket:
+                     cq: CompletionQueue | None = None,
+                     sclass: StreamClass | None = None,
+                     v_submit: float | None = None) -> IOTicket:
         """Coupled write: blocks until the rows land (the warp holds its
         slot for the whole program/flush, collapsing queue depth)."""
         t0 = time.perf_counter()
+        sc = stream_class_of(tag if tag else "write", sclass)
         ids = np.asarray(ids)
         rows = np.asarray(rows, self.store.dtype)
         ids, rows = keep_last_writer(ids, rows)
@@ -1219,6 +1662,11 @@ class SyncIOEngine:
         self.stats.virtual_write_s += virt
         self.stats.wall_complete_s += t1 - t0
         self.stats.write_batches += 1
+        b = self.stats._bucket(sc.name)
+        b["write_requests"] += len(ids)
+        b["write_bytes"] += nbytes
+        b["write_batches"] += 1
+        b["virtual_write_s"] += virt
         fut: Future = Future()
         fut.set_result((None, virt))
         tk = IOTicket(fut, len(ids), nbytes,
@@ -1242,15 +1690,23 @@ def make_engine(mode: str, store: FeatureStore, worker_budget: float = 0.3,
                 striped: bool = True, coalesce_gap: int | str = 8,
                 chaos: ChaosSchedule | None | str = "env",
                 retry: RetryPolicy | None = None,
-                degrade_after: int = 3):
+                degrade_after: int = 3,
+                sched: str = "wfq", class_weights: dict | None = None,
+                qwait_high_s: float | None = None,
+                qwait_low_s: float | None = None,
+                sched_log: bool = False):
     """Engine for an ablation mode (shared by trainer and server):
     ``cpu`` -> CPUManagedEngine, ``gids`` -> SyncIOEngine, anything
     Helios-flavoured -> AsyncIOEngine (``striped``/``coalesce_gap`` tune
     the per-shard SQ read path; ``coalesce_gap="adaptive"`` re-picks the
     gap per batch from offset density; ``striped=False`` is the legacy
     single-queue ablation).  ``chaos``/``retry``/``degrade_after``
-    configure fault injection + bounded-retry recovery on every mode —
-    the default ``chaos="env"`` reads ``HELIOS_CHAOS``."""
+    configure fault injection + bounded-retry recovery on every mode.
+    ``sched``/``class_weights``/``qwait_high_s``/``qwait_low_s`` configure
+    per-stream-class shard scheduling + back-pressure (docs/streams.md);
+    the coupled cpu/gids baselines have no queues, so the knobs only
+    apply to the striped/legacy Helios engine.  The default
+    ``chaos="env"`` reads ``HELIOS_CHAOS``."""
     if mode == "cpu":
         return CPUManagedEngine(store, env=env, chaos=chaos, retry=retry,
                                 degrade_after=degrade_after)
@@ -1260,4 +1716,7 @@ def make_engine(mode: str, store: FeatureStore, worker_budget: float = 0.3,
     return AsyncIOEngine(store, worker_budget=worker_budget, env=env,
                          striped=striped, coalesce_gap=coalesce_gap,
                          chaos=chaos, retry=retry,
-                         degrade_after=degrade_after)
+                         degrade_after=degrade_after,
+                         sched=sched, class_weights=class_weights,
+                         qwait_high_s=qwait_high_s,
+                         qwait_low_s=qwait_low_s, sched_log=sched_log)

@@ -5,9 +5,14 @@
 more tier in the existing split-phase hierarchy instead of a separate RPC
 path.  A request batch is striped by row OWNER — one SQE batch per peer,
 exactly how ``AsyncIOEngine`` stripes by storage shard — and each peer's
-batches are serviced FIFO by a bounded worker pool, so peers progress in
-parallel and a read submitted after an in-flight write to the same peer
-observes that write.
+batches drain through the same class-aware ``ShardScheduler`` a storage
+shard uses (strict priority for demand, weighted-fair bulk, FIFO within a
+class — docs/streams.md), so peers progress in parallel and the
+scheduler's hazard checks keep a read submitted after an in-flight write
+to the same peer observing that write.  DEMAND legs that cross the fabric
+are booked as REMOTE_DEMAND; each peer's virtual busy-until clock is the
+shared link all classes' in-flight batches push (NetworkModel inflight
+sharing).
 
 Timing per peer batch (virtual seconds, deterministic):
 
@@ -34,8 +39,9 @@ from concurrent.futures import Future
 import numpy as np
 
 from repro.core.iostack import (CompletionQueue, IOStats, IOTicket,
-                                _ShardedCompletion, _recover_op,
-                                keep_last_writer)
+                                StreamClass, _ShardedCompletion, _SQE,
+                                _note_qwait, _recover_op, _sched_init,
+                                keep_last_writer, stream_class_of)
 from repro.core.simulator import (ArrayModel, DEFAULT_ENVELOPE,
                                   HardwareEnvelope, NetworkModel)
 from repro.distributed.partition import PartitionedFeatureStore
@@ -56,7 +62,11 @@ class RemoteIOEngine:
                  net: NetworkModel | None = None, coordinator=None,
                  chaos: ChaosSchedule | None | str = "env",
                  retry: RetryPolicy | None = None,
-                 degrade_after: int = 3):
+                 degrade_after: int = 3,
+                 sched: str = "wfq", class_weights: dict | None = None,
+                 qwait_high_s: float | None = None,
+                 qwait_low_s: float | None = None,
+                 sched_log: bool = False):
         if not 0 <= me < pstore.n_workers:
             raise ValueError(f"me={me} outside fleet of {pstore.n_workers}")
         self.store = pstore
@@ -90,10 +100,18 @@ class RemoteIOEngine:
         self._lock = threading.Lock()
         self.stats._lock = self._lock   # atomic IOStats.snapshot()
         n_peers = pstore.n_workers
-        self._sqs = [queue.Queue() for _ in range(n_peers)]
+        # class-aware per-peer schedulers replace the FIFO queues: each
+        # peer's virtual busy-until clock IS the shared fabric link —
+        # every class's in-flight batches against that peer push the same
+        # clock, so a prefetch storm to one peer delays (and is seen by)
+        # that peer's demand legs, exactly like NetworkModel inflight
+        # sharing (see docs/streams.md)
+        self._schedulers = _sched_init(self, n_peers, sched, class_weights,
+                                       qwait_high_s, qwait_low_s, sched_log)
         self._cqs = [queue.Queue() for _ in range(n_peers)]
         self._peer_lk = [threading.Lock() for _ in range(n_peers)]
         self._ready: queue.Queue = queue.Queue()
+        self._paused = False
         self._stop = False
         self._threads = [threading.Thread(target=self._worker, daemon=True)
                          for _ in range(self.n_workers)]
@@ -111,14 +129,26 @@ class RemoteIOEngine:
         return int(256 * self.store.stores[peer].n_shards
                    * min(1.0, self.worker_budget / 0.3))
 
+    def _leg_class(self, base: StreamClass, w: int) -> StreamClass:
+        """Peer legs inherit the request's class, except DEMAND legs that
+        cross the fabric: those are REMOTE_DEMAND — still strict-priority
+        over bulk, but distinguishable in stats and one notch below local
+        demand when both contend for the same peer."""
+        if base == StreamClass.DEMAND and w != self.me:
+            return StreamClass.REMOTE_DEMAND
+        return base
+
     # -- submission ------------------------------------------------------
     def submit(self, ids: np.ndarray, out: np.ndarray | None = None,
                dest: np.ndarray | None = None, tag: str = "",
-               cq: CompletionQueue | None = None) -> IOTicket:
+               cq: CompletionQueue | None = None,
+               sclass: StreamClass | None = None,
+               v_submit: float | None = None) -> IOTicket:
         fut: Future = Future()
         t0 = time.perf_counter()
         ids = np.asarray(ids)
         nbytes = len(ids) * self.store.row_bytes
+        sc = stream_class_of(tag, sclass)
         buf = out
         if buf is None:
             buf = np.empty((len(ids), self.store.row_dim), self.store.dtype)
@@ -126,6 +156,7 @@ class RemoteIOEngine:
                     else np.arange(len(ids)))
         own, loc = self.store.to_local(ids)
         comp = _ShardedCompletion(self, fut, buf if out is None else None, 0)
+        comp.sclass = sc
         batches = []
         for w in range(self.store.n_workers):
             m = own == w
@@ -142,7 +173,9 @@ class RemoteIOEngine:
         else:
             comp.pending = len(batches)
             for w, offs, d in batches:
-                self._sqs[w].put(("r", offs, (d, buf), comp, t0))
+                self._schedulers[w].put(
+                    _SQE("r", offs, (d, buf), comp, t0,
+                         self._leg_class(sc, w), v_submit))
                 self._ready.put(w)
         tk.submit_wall = time.perf_counter() - t0
         with self._lock:
@@ -151,12 +184,18 @@ class RemoteIOEngine:
             self.stats.wall_submit_s += tk.submit_wall
             self.stats.batches += 1
             self.stats.shard_batches += len(batches)
+            b = self.stats._bucket(sc.name)
+            b["requests"] += len(ids)
+            b["bytes"] += nbytes
+            b["batches"] += 1
         if cq is not None:
             cq.add(tk)
         return tk
 
     def submit_write(self, ids: np.ndarray, rows: np.ndarray, tag: str = "",
-                     cq: CompletionQueue | None = None) -> IOTicket:
+                     cq: CompletionQueue | None = None,
+                     sclass: StreamClass | None = None,
+                     v_submit: float | None = None) -> IOTicket:
         """Owner-writes: the batch stripes by row owner and each slice
         lands in the OWNER's store (over the network for peers), so there
         is exactly one durable copy of every row fleet-wide."""
@@ -165,6 +204,7 @@ class RemoteIOEngine:
                                   "open it with writable=True")
         fut: Future = Future()
         t0 = time.perf_counter()
+        sc = stream_class_of(tag if tag else "write", sclass)
         ids = np.asarray(ids)
         rows = np.asarray(rows, self.store.dtype)
         if rows.shape != (len(ids), self.store.row_dim):
@@ -174,6 +214,7 @@ class RemoteIOEngine:
         nbytes = len(ids) * self.store.row_bytes
         own, loc = self.store.to_local(ids)
         comp = _ShardedCompletion(self, fut, None, 0, kind="w")
+        comp.sclass = sc
         batches = []
         for w in range(self.store.n_workers):
             m = own == w
@@ -190,7 +231,9 @@ class RemoteIOEngine:
         else:
             comp.pending = len(batches)
             for w, offs, data in batches:
-                self._sqs[w].put(("w", offs, data, comp, t0))
+                self._schedulers[w].put(
+                    _SQE("w", offs, data, comp, t0,
+                         self._leg_class(sc, w), v_submit))
                 self._ready.put(w)
         tk.submit_wall = time.perf_counter() - t0
         with self._lock:
@@ -199,6 +242,10 @@ class RemoteIOEngine:
             self.stats.wall_submit_s += tk.submit_wall
             self.stats.write_batches += 1
             self.stats.write_shard_batches += len(batches)
+            b = self.stats._bucket(sc.name)
+            b["write_requests"] += len(ids)
+            b["write_bytes"] += nbytes
+            b["write_batches"] += 1
         if cq is not None:
             cq.add(tk)
         return tk
@@ -302,43 +349,60 @@ class RemoteIOEngine:
                 w = self._ready.get(timeout=0.1)
             except queue.Empty:
                 continue
+            if self._paused:
+                self._ready.put(w)
+                self._ready.task_done()
+                time.sleep(2e-4)
+                continue
             if not self._peer_lk[w].acquire(blocking=False):
                 self._ready.put(w)
                 self._ready.task_done()
                 time.sleep(2e-4)
                 continue
             try:
-                try:
-                    kind, offs, payload, comp, t_enq = \
-                        self._sqs[w].get_nowait()
-                except queue.Empty:     # pragma: no cover - token per entry
+                sqe = self._schedulers[w].pop()
+                if sqe is None:         # pragma: no cover - token per entry
                     continue
+                comp = sqe.comp
                 try:
                     t0 = time.perf_counter()
-                    if kind == "w":
-                        out = self._service_peer_write(w, offs, payload)
+                    if sqe.kind == "w":
+                        out = self._service_peer_write(w, sqe.offs,
+                                                       sqe.payload)
                     else:
-                        d, buf = payload
-                        out = self._service_peer(w, offs, d, buf)
+                        d, buf = sqe.payload
+                        out = self._service_peer(w, sqe.offs, d, buf)
                     t1 = time.perf_counter()
+                    v0, v1, qwait_v = self._schedulers[w].complete(sqe,
+                                                                   out[0])
+                    _note_qwait(self, w, sqe, v0, v1, qwait_v)
+                    leg_virt = (v1 - sqe.v_submit
+                                if sqe.v_submit is not None else out[0])
                     # one peer batch == one "range" of wire traffic
-                    self._cqs[w].put((comp, (*out, t1 - t0)))
+                    self._cqs[w].put(
+                        (comp, (leg_virt, out[1], out[2], t1 - t0, qwait_v)))
                     tr = _trace.TRACER
                     if tr is not None and tr.enabled:
                         psid = getattr(comp, "psid", None)
-                        tr.record("net.qwait", t_enq, t0,
+                        tr.record("net.qwait", sqe.t_enq, t0,
                                   track=f"peer{w}/q", cat="net",
                                   parent=psid,
-                                  args={"peer": w, "kind": kind})
-                        tr.record(f"net.{'write' if kind == 'w' else 'read'}",
-                                  t0, t1, track=f"peer{w}", cat="net",
-                                  parent=psid,
-                                  args={"peer": w, "virt_s": out[0],
-                                        "rows": len(offs)})
+                                  args={"peer": w, "kind": sqe.kind,
+                                        "sclass": sqe.sclass.name,
+                                        "qwait_virt_s": qwait_v})
+                        tr.record(
+                            f"net.{'write' if sqe.kind == 'w' else 'read'}",
+                            t0, t1, track=f"peer{w}", cat="net",
+                            parent=psid,
+                            args={"peer": w, "virt_s": out[0],
+                                  "rows": len(sqe.offs),
+                                  "sclass": sqe.sclass.name})
                 except Exception as e:
                     # errored CQE: the owning ticket sees the exception
                     # via shard_fail and the worker stays alive for the
-                    # next peer batch
+                    # next peer batch.  The scheduler entry still
+                    # completes (zero service) so its hazards release
+                    self._schedulers[w].complete(sqe, 0.0)
                     self._cqs[w].put((comp, e))
             finally:
                 self._peer_lk[w].release()
@@ -347,6 +411,27 @@ class RemoteIOEngine:
                 except Exception as e:  # pragma: no cover - defensive
                     self.worker_errors.append(e)
                 self._ready.task_done()
+
+    # -- congestion control (same contract as AsyncIOEngine) --------------
+    def pause(self):
+        """Hold service: workers requeue ready tokens until ``resume()``
+        so callers can stage a full virtual arrival schedule."""
+        self._paused = True
+
+    def resume(self):
+        self._paused = False
+
+    def throttled(self, sclass: StreamClass = StreamClass.PREFETCH) -> bool:
+        """Back-pressure: True for PREFETCH/CHECKPOINT while strict-class
+        p99 queue delay sits above the engaged watermark."""
+        if sclass not in (StreamClass.PREFETCH, StreamClass.CHECKPOINT):
+            return False
+        return self._throttle_on
+
+    def qwait_summary(self) -> dict:
+        with self._lock:
+            hists = dict(self._qwait_hist)
+        return {name: h.summary() for name, h in hists.items()}
 
     # -- degraded-peer introspection -------------------------------------
     def degraded_shards(self) -> np.ndarray:

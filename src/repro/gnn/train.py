@@ -90,6 +90,16 @@ class TrainerConfig:
     io_deadline_s: float | None = None  # per-attempt virtual deadline
     io_max_retries: int = 4
     io_backoff_s: float = 1e-3     # exponential backoff base (virtual s)
+    # per-stream-class shard scheduling + back-pressure (docs/streams.md):
+    # "wfq" = strict demand priority over a weighted-fair bulk tail,
+    # "fifo" = the pre-congestion-control arrival order (ablation);
+    # io_qwait_high_s engages prefetch/checkpoint throttling when demand
+    # p99 queue delay (virtual s) crosses it, io_qwait_low_s releases
+    # (None = high/2; both None = back-pressure off)
+    io_sched: str = "wfq"
+    io_class_weights: dict | None = None
+    io_qwait_high_s: float | None = None
+    io_qwait_low_s: float | None = None
     seed: int = 0
 
     def retry_policy(self):
@@ -187,7 +197,11 @@ class OutOfCoreGNNTrainer:
 
         # --- IO engine per mode ------------------------------------------
         self.io = make_engine(cfg.mode, store, cfg.io_worker_budget,
-                              chaos=cfg.chaos, retry=cfg.retry_policy())
+                              chaos=cfg.chaos, retry=cfg.retry_policy(),
+                              sched=cfg.io_sched,
+                              class_weights=cfg.io_class_weights,
+                              qwait_high_s=cfg.io_qwait_high_s,
+                              qwait_low_s=cfg.io_qwait_low_s)
 
         # --- hotness pre-sampling + cache placement (paper §3.2.2) -------
         # presample on a SEPARATE sampler so the training sampler's rng
@@ -230,7 +244,11 @@ class OutOfCoreGNNTrainer:
             c = HeteroCache(
                 st, None, 0, host_rows,
                 make_engine(cfg.mode, st, cfg.io_worker_budget,
-                            chaos=cfg.chaos, retry=cfg.retry_policy()),
+                            chaos=cfg.chaos, retry=cfg.retry_policy(),
+                            sched=cfg.io_sched,
+                            class_weights=cfg.io_class_weights,
+                            qwait_high_s=cfg.io_qwait_high_s,
+                            qwait_low_s=cfg.io_qwait_low_s),
                 write_policy=cfg.write_policy,
                 write_combine_rows=cfg.write_combine_rows,
                 fused=cfg.fused_lookup)
@@ -550,6 +568,13 @@ class OutOfCoreGNNTrainer:
                      "degraded_events": io_snap.degraded_events,
                      "degraded_skipped_rows":
                          cs_snap.degraded_skipped_rows,
+                     # per-stream-class breakdown + back-pressure
+                     # visibility (docs/streams.md)
+                     "by_class": io_snap.by_class,
+                     "throttle_engaged": io_snap.throttle_engaged,
+                     "throttle_released": io_snap.throttle_released,
+                     "throttled_skipped_rows":
+                         cs_snap.throttled_skipped_rows,
                      # pipeline-bubble attribution (always on; see
                      # repro.obs.analyze.overlap_report)
                      "overlap_efficiency":
@@ -561,6 +586,10 @@ class OutOfCoreGNNTrainer:
             # the traced span tree yields the full per-phase attribution
             io_snap.publish("train.io")
             cs_snap.publish("train.cache")
+            qs = getattr(self.io, "qwait_summary", None)
+            if qs is not None:
+                from repro.obs.metrics import publish_qwait
+                publish_qwait("train.io.qwait", qs())
             out["obs"] = _analyze.analyze_epoch(tr,
                                                 makespan=out["virtual_s"])
         if cfg.train_embeddings:

@@ -76,6 +76,13 @@ class ServerConfig:
     io_deadline_s: float | None = None
     io_max_retries: int = 4
     io_backoff_s: float = 1e-3
+    # per-stream-class shard scheduling + back-pressure, same semantics
+    # as TrainerConfig (docs/streams.md): serving demand gathers ride the
+    # DEMAND class; prefetch admission honors the qwait watermark
+    io_sched: str = "wfq"
+    io_class_weights: dict | None = None
+    io_qwait_high_s: float | None = None
+    io_qwait_low_s: float | None = None
     seed: int = 0
 
     def retry_policy(self):
@@ -103,7 +110,11 @@ class GNNInferenceServer:
 
         # --- IO engine per mode (same ablation axes as the trainer) ------
         self.io = make_engine(cfg.mode, store, cfg.io_worker_budget,
-                              chaos=cfg.chaos, retry=cfg.retry_policy())
+                              chaos=cfg.chaos, retry=cfg.retry_policy(),
+                              sched=cfg.io_sched,
+                              class_weights=cfg.io_class_weights,
+                              qwait_high_s=cfg.io_qwait_high_s,
+                              qwait_low_s=cfg.io_qwait_low_s)
 
         # --- hotness placement; presample on a SEPARATE sampler so the
         # serving sampler's rng stream is untouched (replayable) ----------

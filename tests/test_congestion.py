@@ -1,0 +1,264 @@
+"""Stream-class scheduler invariants (docs/streams.md).
+
+Per-class FIFO order, exactly-once completion with correct bytes under
+ANY interleaving of tagged submissions — across the sync, striped-wfq,
+striped-fifo, legacy single-queue, and remote engines — plus the
+deterministic guarantees the congestion bench gates: a saturating
+PREFETCH storm cannot delay a DEMAND batch (strict priority), and the
+back-pressure watermark engages/releases with hysteresis while only
+ever shedding optional traffic.
+"""
+import pytest
+
+import numpy as np
+
+try:                                    # optional dep: property sweep in CI
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.iostack import (DEFAULT_CLASS_WEIGHTS, STRICT_CLASSES,
+                                AsyncIOEngine, FeatureStore, StreamClass,
+                                SyncIOEngine, stream_class_of)
+
+SET = dict(max_examples=15, deadline=None)
+MODES = ["sync", "striped-wfq", "striped-fifo", "legacy", "remote"]
+
+#: tag -> expected class, one per stream class (the contract's emitters)
+TAG_CLASS = {
+    "": StreamClass.DEMAND,
+    "prefetch": StreamClass.PREFETCH,
+    "flush": StreamClass.WRITEBACK,
+    "ckpt": StreamClass.CHECKPOINT,
+    "refresh": StreamClass.PREFETCH,
+}
+
+_STORE = None
+_ENGINES = {}
+
+
+def _store():
+    global _STORE
+    if _STORE is None:
+        import tempfile
+        _STORE = FeatureStore(tempfile.mkdtemp(prefix="congestion_"),
+                              n_rows=96, row_dim=4, n_shards=3,
+                              create=True, rng_seed=11)
+    return _STORE
+
+
+def _pstore():
+    """3-worker partitioned store for the remote engine mode."""
+    if "pstore" not in _ENGINES:
+        import tempfile
+        from repro.distributed.partition import (PartitionedFeatureStore,
+                                                 make_partition)
+        _ENGINES["pstore"] = PartitionedFeatureStore(
+            tempfile.mkdtemp(prefix="congestion_remote_"), 96, 4,
+            make_partition("hash", 96, 3), n_shards=2, create=True,
+            rng_seed=11)
+    return _ENGINES["pstore"]
+
+
+def _engine(mode):
+    """Shared engines (threads join at process exit), sched-logged where
+    a scheduler exists so the FIFO property can read its decisions."""
+    if mode not in _ENGINES:
+        if mode == "sync":
+            _ENGINES[mode] = SyncIOEngine(_store())
+        elif mode == "legacy":
+            _ENGINES[mode] = AsyncIOEngine(_store(), striped=False)
+        elif mode == "remote":
+            from repro.distributed.remote_engine import RemoteIOEngine
+            _ENGINES[mode] = RemoteIOEngine(_pstore(), me=0, sched_log=True)
+        else:                            # striped-wfq / striped-fifo
+            _ENGINES[mode] = AsyncIOEngine(
+                _store(), sched=mode.split("-")[1], sched_log=True)
+    return _ENGINES[mode]
+
+
+def test_tag_class_mapping():
+    """The documented tag -> class inference, plus explicit override."""
+    for tag, cls in TAG_CLASS.items():
+        assert stream_class_of(tag, None) is cls
+    assert stream_class_of("remote", None) is StreamClass.REMOTE_DEMAND
+    assert stream_class_of("write", None) is StreamClass.WRITEBACK
+    assert stream_class_of("prefetch",
+                           StreamClass.DEMAND) is StreamClass.DEMAND
+    assert all(c not in DEFAULT_CLASS_WEIGHTS for c in STRICT_CLASSES)
+
+
+def _check_interleaving(mode, batches):
+    """ANY interleaving of tagged submissions: every ticket completes
+    exactly once with the exact store bytes (class-aware reordering must
+    never permute, drop, or duplicate a row), per-class IOStats buckets
+    account every batch exactly once, and — where a scheduler logs its
+    decisions — batches of one class on one stream are SERVED in
+    submission order (per-class FIFO)."""
+    eng = _engine(mode)
+    store = _pstore() if mode == "remote" else _store()
+    ev0 = len(eng.sched_events) if getattr(eng, "sched_log", False) else 0
+    before = eng.stats.snapshot()
+    tickets = [(eng.submit(ids, tag=tag), ids) for tag, ids in batches]
+    for tk, ids in tickets:
+        data, virt = tk.wait()
+        np.testing.assert_array_equal(data, store.read_rows(ids))
+        assert virt >= 0.0
+    # exactly-once per-class accounting: bucket batch counts sum to the
+    # submitted batch count, rows to the submitted rows
+    d = eng.stats.delta(before)
+    want = {}
+    for tag, ids in batches:
+        b = want.setdefault(TAG_CLASS[tag].name,
+                            {"batches": 0, "requests": 0})
+        b["batches"] += 1
+        b["requests"] += len(ids)
+    got = {c: b for c, b in d.by_class.items() if b.get("batches")}
+    assert set(got) >= set(want)
+    for c, w in want.items():
+        assert got[c]["batches"] == w["batches"]
+        assert got[c]["requests"] == w["requests"]
+    if getattr(eng, "sched_log", False):
+        # served order == submission order within (stream, class)
+        per = {}
+        for stream, cname, seq, vs, v0, v1, kind in eng.sched_events[ev0:]:
+            per.setdefault((stream, cname), []).append((v0, seq))
+        for (stream, cname), evs in per.items():
+            seqs = [seq for _, seq in sorted(evs)]
+            assert seqs == sorted(seqs), \
+                f"class {cname} served out of order on stream {stream}"
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_interleaving_deterministic(mode):
+    """Seeded interleavings of all five tags, always run (no hypothesis
+    needed): the exactly-once / per-class FIFO contract."""
+    rng = np.random.default_rng(17)
+    tags = sorted(TAG_CLASS)
+    for _ in range(6):
+        batches = [(tags[int(rng.integers(0, len(tags)))],
+                    rng.integers(0, 96, int(rng.integers(1, 40))))
+                   for _ in range(int(rng.integers(1, 10)))]
+        _check_interleaving(mode, batches)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("mode", MODES)
+    @given(batches=st.lists(
+        st.tuples(st.sampled_from(sorted(TAG_CLASS)),
+                  hnp.arrays(np.int64, st.integers(1, 40),
+                             elements=st.integers(0, 95))),
+        min_size=1, max_size=10))
+    @settings(**SET)
+    def test_interleaving_property(mode, batches):
+        _check_interleaving(mode, batches)
+
+
+def _staged_storm(sched):
+    """Fresh engine; stage 40 saturating PREFETCH batches then one DEMAND
+    batch, all arriving at virtual t=0, and drain.  Returns the demand
+    batch's per-shard queue delays (v_start - v_submit)."""
+    eng = AsyncIOEngine(_store(), sched=sched, sched_log=True, chaos=None)
+    rng = np.random.default_rng(3)
+    try:
+        eng.pause()
+        pf = [eng.submit(rng.integers(0, 96, 32), tag="prefetch",
+                         v_submit=0.0) for _ in range(40)]
+        dem = eng.submit(rng.integers(0, 96, 16), v_submit=0.0)
+        eng.resume()
+        for tk in pf:
+            tk.wait()
+        dem.wait()
+        return [v0 - vs for _, cname, _, vs, v0, _, _ in eng.sched_events
+                if cname == "DEMAND"]
+    finally:
+        eng.close()
+
+
+def test_prefetch_storm_cannot_starve_demand():
+    """Strict priority: with 40 PREFETCH batches and one DEMAND batch all
+    queued at t=0, wfq serves the demand batch FIRST on every shard
+    (queue delay exactly 0), while FIFO arrival order makes it wait out
+    the whole storm."""
+    qw_wfq = _staged_storm("wfq")
+    qw_fifo = _staged_storm("fifo")
+    assert qw_wfq and qw_fifo
+    assert max(qw_wfq) == 0.0
+    assert min(qw_fifo) > 0.0
+
+
+def test_backpressure_hysteresis():
+    """A demand storm past the high watermark engages the throttle (bulk
+    classes only — demand/write-back never throttle); a quiet window
+    drains the p99 below the low watermark and releases it."""
+    eng = AsyncIOEngine(_store(), sched="wfq", qwait_high_s=1e-6,
+                        chaos=None)
+    rng = np.random.default_rng(5)
+    try:
+        eng.pause()
+        storm = [eng.submit(rng.integers(0, 96, 32), v_submit=0.0)
+                 for _ in range(30)]
+        eng.resume()
+        for tk in storm:
+            tk.wait()
+        assert eng.throttled(StreamClass.PREFETCH)
+        assert eng.throttled(StreamClass.CHECKPOINT)
+        assert not eng.throttled(StreamClass.DEMAND)
+        assert not eng.throttled(StreamClass.WRITEBACK)
+        s = eng.stats.snapshot()
+        assert s.throttle_engaged >= 1 and s.throttle_released == 0
+        # quiet phase: arrivals 1 virtual second apart -> zero queue
+        # delay, window refills with zeros, p99 < low watermark
+        for j in range(25):
+            eng.submit(rng.integers(0, 96, 8), v_submit=1.0 + j).wait()
+        assert not eng.throttled(StreamClass.PREFETCH)
+        s = eng.stats.snapshot()
+        assert s.throttle_released >= 1
+        # per-class queue-delay histograms saw the strict-class delays
+        summ = eng.qwait_summary()
+        assert summ["DEMAND"]["count"] > 0
+        assert summ["DEMAND"]["max"] > 0.0
+    finally:
+        eng.close()
+
+
+def test_throttled_default_off():
+    """No watermark configured -> never throttled, on every engine."""
+    for mode in ("sync", "striped-wfq", "legacy", "remote"):
+        eng = _engine(mode)
+        assert not eng.throttled(StreamClass.PREFETCH)
+        assert not eng.throttled(StreamClass.DEMAND)
+
+
+def test_cache_sheds_prefetch_while_throttled():
+    """HeteroCache.prefetch_rows refuses admission while the engine is
+    throttled and counts the shed rows; demand gathers keep working and
+    stay byte-identical."""
+    from repro.core.hetero_cache import HeteroCache
+    store = _store()
+    eng = AsyncIOEngine(store, sched="wfq", qwait_high_s=1e-9, chaos=None)
+    rng = np.random.default_rng(9)
+    try:
+        cache = HeteroCache(store, None, 0, 24, eng, fused=False)
+        cache.policy._scores[:48] = 1.0
+        eng.pause()
+        storm = [eng.submit(rng.integers(0, 96, 32), v_submit=0.0)
+                 for _ in range(30)]
+        eng.resume()
+        for tk in storm:
+            tk.wait()
+        assert eng.throttled(StreamClass.PREFETCH)
+        # rows 24..47 are hot but NOT resident (the zero-score initial
+        # placement filled the host tier with rows 0..23), so they
+        # survive the candidate filter and hit the throttle gate
+        assert cache.prefetch_rows(np.arange(24, 48)) is None
+        assert cache.stats.throttled_skipped_rows == 24
+        ids = rng.integers(0, 96, 40)
+        np.testing.assert_array_equal(cache.gather(ids),
+                                      store.read_rows(ids))
+        cache.close()
+    finally:
+        eng.close()
